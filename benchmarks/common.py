@@ -1,0 +1,27 @@
+"""Shared timing utilities for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> Tuple[float, float]:
+    """Median wall time (s) and IQR of a jitted callable (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times = np.asarray(times)
+    return float(np.median(times)), float(np.percentile(times, 75) - np.percentile(times, 25))
+
+
+def csv_row(*cols) -> str:
+    return ",".join(str(c) for c in cols)

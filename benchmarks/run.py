@@ -1,0 +1,51 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller sweeps")
+    ap.add_argument("--only", default="", help="comma list of sections")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig6_sparsity, table2_accuracy, table3_ttm, table4_kron, table5_realworld,
+    )
+
+    sections = {
+        "table2": table2_accuracy.main,
+        "table3": table3_ttm.main,
+        "table4": table4_kron.main,
+        "fig6": fig6_sparsity.main,
+        "table5": table5_realworld.main,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        sections = {k: v for k, v in sections.items() if k in keep}
+
+    failed = []
+    for name, fn in sections.items():
+        print(f"\n=== {name} " + "=" * (66 - len(name)), flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"--- {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        print(f"\nFAILED sections: {failed}")
+        sys.exit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Table IV: Kronecker-product module performance (rank 32..256)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def run(ranks=(32, 64, 128, 256), nnz=128) -> list:
+    import jax.numpy as jnp
+
+    from benchmarks.common import time_fn
+    from repro.kernels import ops, ref
+
+    paper = {32: (9.655e-6, 0.578e-6), 64: (14.72e-6, 2.301e-6),
+             128: (24.87e-6, 9.195e-6), 256: (48.24e-6, 38.55e-6)}
+    rows = []
+    rng = np.random.default_rng(0)
+    for r in ranks:
+        a = jnp.asarray(rng.standard_normal((nnz, r)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((nnz, r)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((nnz,)).astype(np.float32))
+        t_ref, _ = time_fn(lambda x, y, z: ref.kron_contrib_ref(x, y, z), a, b, v)
+        err = float(np.abs(np.asarray(ops.kron_contrib(a, b, v))
+                           - np.asarray(ref.kron_contrib_ref(a, b, v))).max())
+        rows.append(dict(
+            size=f"1x{r} (x) 1x{r}", jnp_us_per_kron=t_ref / nnz * 1e6,
+            kernel_maxerr=err, paper_cpu_us=paper[r][0] * 1e6,
+            paper_fpga_us=paper[r][1] * 1e6,
+        ))
+    return rows
+
+
+def main():
+    print("table4_kron: size,jnp_us_per_kron,kernel_maxerr,paper_cpu_us,paper_fpga_us")
+    for r in run():
+        print(f"{r['size']},{r['jnp_us_per_kron']:.3f},{r['kernel_maxerr']:.2e},"
+              f"{r['paper_cpu_us']:.3f},{r['paper_fpga_us']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

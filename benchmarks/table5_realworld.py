@@ -1,0 +1,61 @@
+"""Paper Table V: sparse Tucker on the four real-world benchmarks.
+
+Amazon (20000^3, 902 nnz, R=32, 2 sweeps), NELL-2 (1000^3, 24000 nnz, R=16,
+5 sweeps), parallel-matmul tensor (25^3, exact, R=5, 3 sweeps) and the
+retinal angiogram (130x150, R=[30,35], 12 sweeps). All four run at the
+paper's published shapes/sparsities (see repro.sparse.datasets for
+provenance); run-times are CPU wall clock for OUR implementation — the
+paper's CPU / hybrid-FPGA rows are quoted for reference.
+
+Note the paper's headline: the 20K^3 Amazon tensor is 32 TB dense — the
+dense baseline cannot even be *stored*; the sparse algorithm runs it in
+seconds on this laptop-class container.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+PAPER = {
+    "amazon": dict(cpu_s=100.045, hybrid_s=86.785, dense_fpga_s=9.47e4),
+    "nell2": dict(cpu_s=7.355, hybrid_s=0.403, dense_fpga_s=9.5),
+    "matmul": dict(cpu_s=8.175e-2, hybrid_s=2.179e-3, dense_fpga_s=9.9e-3),
+    "angiogram": dict(cpu_s=0.1838, hybrid_s=9.898e-3, dense_fpga_s=1.18e-2),
+}
+
+
+def run(names=("amazon", "nell2", "matmul", "angiogram")) -> list:
+    import jax.numpy as jnp
+
+    from benchmarks.common import time_fn
+    from repro.core.hooi import hooi_sparse, sweep_call_counts
+    from repro.sparse.datasets import PAPER_DATASETS
+
+    rows = []
+    for name in names:
+        ds = PAPER_DATASETS[name]
+        coo = ds.build()
+        t, _ = time_fn(
+            lambda: hooi_sparse(coo, ds.ranks, n_iter=ds.n_iter, method="householder"),
+            warmup=1, iters=3,
+        )
+        res = hooi_sparse(coo, ds.ranks, n_iter=ds.n_iter, method="householder")
+        counts = sweep_call_counts(ds.shape, ds.ranks, coo.nnz, ds.n_iter)
+        rows.append(dict(
+            name=name, shape="x".join(map(str, ds.shape)), nnz=coo.nnz,
+            ours_s=t, rel_err=float(res.rel_error),
+            kron_calls=counts["kron_calls"], **PAPER[name],
+        ))
+    return rows
+
+
+def main():
+    print("table5_realworld: name,shape,nnz,ours_cpu_s,rel_err,kron_calls,"
+          "paper_cpu_s,paper_hybrid_s,paper_dense_fpga_s")
+    for r in run():
+        print(f"{r['name']},{r['shape']},{r['nnz']},{r['ours_s']:.4f},"
+              f"{r['rel_err']:.4f},{r['kron_calls']},{r['cpu_s']},{r['hybrid_s']},"
+              f"{r['dense_fpga_s']}")
+
+
+if __name__ == "__main__":
+    main()

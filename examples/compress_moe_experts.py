@@ -1,0 +1,48 @@
+"""Beyond-paper integration: Tucker-compress a trained MoE expert stack.
+
+    PYTHONPATH=src python examples/compress_moe_experts.py
+
+The (E, d, ff) expert tensor of the granite-MoE config is a genuine 3-way
+tensor; the paper's HOOI (with its QRP factor update) factorizes it, and
+``tucker_expert_apply`` serves experts from the factors without ever
+materializing the dense stack.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.tucker_layers import (
+    expert_compression_ratio, tucker_expert_apply, tuckerize_expert_stack,
+)
+
+
+def main():
+    cfg = get_config("granite-moe-1b-a400m", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    experts = params["layers"]["moe_wi"][0].astype(jnp.float32)  # (E, d, ff)
+    e, d, f = experts.shape
+    # make the stack genuinely low-rank-ish (trained experts share structure):
+    rng = np.random.default_rng(0)
+    mix = jnp.asarray(rng.standard_normal((e, e)).astype(np.float32)) * 0.1 + jnp.eye(e)
+    experts = jnp.einsum("ef,fdk->edk", mix, experts)
+
+    ranks = (e // 2, d // 2, f // 2)
+    p = tuckerize_expert_stack(experts, ranks, n_iter=3, method="gram")
+    x = jnp.asarray(rng.standard_normal((4, d)).astype(np.float32))
+    errs = []
+    for ei in range(e):
+        approx = tucker_expert_apply(p, ei, x)
+        exact = x @ experts[ei]
+        errs.append(float(jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact)))
+    print(f"expert stack {experts.shape} -> core {p['core'].shape}")
+    print(f"storage ratio: {expert_compression_ratio(e, d, f, ranks):.2f}x")
+    print(f"per-expert matvec relative error: mean={np.mean(errs):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Pod-scale sparse Tucker: the paper's Alg. 2 data-parallel over a mesh.
+
+    PYTHONPATH=src python examples/distributed_tucker.py
+
+Runs the shard_map Kron-accumulation HOOI (nonzeros sharded, factors
+replicated, one psum per mode per sweep) on whatever devices exist, and
+checks it against the single-device reference. On the production pod the
+same code runs on the (pod, data, model) mesh — see launch/dryrun.py.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core.distributed import hooi_sparse_distributed
+from repro.core.hooi import hooi_sparse
+from repro.launch.mesh import make_host_mesh
+from repro.sparse.generators import low_rank_sparse_tensor
+
+
+def main():
+    coo, _ = low_rank_sparse_tensor((60, 50, 40), (4, 3, 2), 0.1, seed=0)
+    print(f"sparse tensor {coo.shape}, nnz={coo.nnz} (density {coo.density():.3f})")
+    mesh = make_host_mesh()
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    ref = hooi_sparse(coo, (4, 3, 2), n_iter=3, method="gram")
+    dist = hooi_sparse_distributed(coo, (4, 3, 2), mesh, n_iter=3, method="gram",
+                                   nnz_axes=("data",))
+    print(f"single-device rel_error: {float(ref.rel_error):.6f}")
+    print(f"distributed  rel_error: {float(dist.rel_error):.6f}")
+    print("per-sweep collective: one psum of Y_(n) per mode "
+          "(independent of nnz -> scales to thousands of nodes)")
+
+
+if __name__ == "__main__":
+    main()

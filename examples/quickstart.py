@@ -1,0 +1,54 @@
+"""Quickstart: sparse Tucker decomposition of the paper's angiogram image.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs the full pipeline of the paper on the retinal-angiogram benchmark
+(Section IV-C): COO sparse storage -> Alg. 2 (Kron accumulation + QRP) ->
+reconstruction + compression ratio.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.hooi import hooi_sparse
+from repro.core.reconstruct import compression_ratio, reconstruct_dense
+from repro.sparse.datasets import PAPER_DATASETS
+
+
+def main():
+    ds = PAPER_DATASETS["angiogram"]
+    coo = ds.build()
+    print(f"angiogram: shape={coo.shape} nnz={coo.nnz} density={coo.density():.3f}")
+
+    res = hooi_sparse(coo, ds.ranks, n_iter=ds.n_iter, method="householder")
+    print(f"rank {list(ds.ranks)} Tucker, {ds.n_iter} sweeps "
+          f"(paper: 12 power iterations, 24 QRP calls)")
+    print(f"relative reconstruction error: {float(res.rel_error):.4f}")
+    print(f"compression ratio: core-only (paper convention) "
+          f"{compression_ratio(coo.shape, ds.ranks, include_factors=False):.2f}x, "
+          f"incl. factors {compression_ratio(coo.shape, ds.ranks):.2f}x")
+
+    xhat = reconstruct_dense(res.core, res.factors)
+    x = coo.to_dense()
+    # simple ascii rendering of original vs reconstruction (16x24 downsample)
+    def render(img, title):
+        img = np.asarray(img, dtype=np.float32)
+        h, w = img.shape
+        rows = []
+        for i in range(0, h - h % 8, h // 16):
+            row = ""
+            for j in range(0, w - w % 8, w // 24):
+                v = img[i : i + 8, j : j + 6].mean()
+                row += " .:*#"[min(4, int(v * 12))]
+            rows.append(row)
+        print(title)
+        print("\n".join(rows))
+
+    render(x, "--- original (thresholded angiogram)")
+    render(jnp.clip(xhat, 0, None), "--- sparse-Tucker reconstruction")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Batched serving example: prefill + decode with the static-shape engine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main():
+    cfg = get_config("repro-100m", smoke=True)
+    mesh = make_host_mesh()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, mesh, params, ServeConfig(max_seq_len=96, batch_size=4))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(4, 16)).astype(np.int32)
+    out = eng.generate(prompts, max_new_tokens=24)
+    print(f"arch={cfg.name}  batch={out.shape[0]}  prompt=16  new=24")
+    for i, row in enumerate(out):
+        print(f"  seq{i}: ...{' '.join(map(str, row[12:24]))} ...")
+    # greedy decode is deterministic: same prompts -> same continuation
+    out2 = eng.generate(prompts, max_new_tokens=24)
+    print("deterministic:", bool((out == out2).all()))
+
+
+if __name__ == "__main__":
+    main()

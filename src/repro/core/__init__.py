@@ -1,0 +1,27 @@
+"""Core library: the paper's sparse Tucker decomposition in JAX.
+
+Modules mirror the paper's accelerator decomposition:
+  coo.py          COO storage (Sec. III-A, Table I)
+  ttm.py          dense TTM, module 1 (Sec. III-B, Alg. 3)
+  kron.py         sparse Kron-accumulation, module 2 (Sec. III-C, Alg. 4)
+  qrp.py          QR with column pivoting, module 3 (Sec. III-D)
+  hooi.py         Alg. 1 (dense baseline) + Alg. 2 (sparse) drivers
+  reconstruct.py  Eq. 7 reconstruction + error metrics
+  distributed.py  pod-scale shard_map data-parallel Alg. 2
+"""
+from repro.core.coo import SparseCOO, fold_dense, unfold_dense
+from repro.core.hooi import HooiResult, hooi_dense, hooi_sparse, sparse_sweep
+from repro.core.kron import (
+    kron_rows,
+    precompute_kron_reuse,
+    sparse_ttm_chain,
+    sparse_ttm_chain_reuse,
+)
+from repro.core.qrp import qrp, qrp_gram, qrp_householder, svd_factor
+from repro.core.reconstruct import (
+    compression_ratio,
+    reconstruct_at,
+    reconstruct_dense,
+    relative_error_dense,
+)
+from repro.core.ttm import ttm, ttm_chain, ttm_unfolded

@@ -1,0 +1,154 @@
+"""COO sparse tensor — the paper's storage format (Section III-A, Table I).
+
+The paper stores only nonzero entries: an ``(nnz, N)`` integer index array and
+an ``(nnz,)`` value array, i.e. O(nnz·N) index + O(nnz) value storage. We keep
+exactly that representation as a JAX pytree so it can flow through jit /
+shard_map / pjit. The dense logical shape is static metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparseCOO:
+    """A sparse tensor in coordinate format.
+
+    Attributes:
+      indices: int32 array of shape (nnz, N). Row t holds the N-dim coordinate
+        of nonzero t. Padding rows are allowed provided the matching value is
+        exactly 0 (they then contribute nothing to any contraction).
+      values:  float array of shape (nnz,).
+      shape:   static dense shape (I_1, ..., I_N).
+    """
+
+    indices: jax.Array
+    values: jax.Array
+    shape: Tuple[int, ...]
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.indices, self.values), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, children):
+        indices, values = children
+        return cls(indices=indices, values=values, shape=tuple(shape))
+
+    # -- basic properties ------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def density(self) -> float:
+        return self.nnz / float(np.prod(self.shape))
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_dense(cls, dense: jax.Array | np.ndarray) -> "SparseCOO":
+        dense = np.asarray(dense)
+        idx = np.argwhere(dense != 0).astype(np.int32)
+        vals = dense[tuple(idx.T)]
+        return cls(jnp.asarray(idx), jnp.asarray(vals), tuple(dense.shape))
+
+    @classmethod
+    def from_parts(cls, indices, values, shape) -> "SparseCOO":
+        indices = jnp.asarray(indices, dtype=jnp.int32)
+        values = jnp.asarray(values)
+        if indices.ndim != 2 or indices.shape[1] != len(shape):
+            raise ValueError(
+                f"indices shape {indices.shape} incompatible with tensor shape {shape}"
+            )
+        if values.shape[0] != indices.shape[0]:
+            raise ValueError("values and indices disagree on nnz")
+        return cls(indices, values, tuple(int(s) for s in shape))
+
+    # -- conversions -------------------------------------------------------
+    def to_dense(self) -> jax.Array:
+        out = jnp.zeros(self.shape, dtype=self.values.dtype)
+        return out.at[tuple(self.indices.T)].add(self.values)
+
+    # -- algebra -----------------------------------------------------------
+    def norm(self) -> jax.Array:
+        """Frobenius norm (Definition 2): padding zeros contribute nothing."""
+        return jnp.sqrt(jnp.sum(jnp.square(self.values.astype(jnp.float32))))
+
+    def scale(self, s) -> "SparseCOO":
+        return SparseCOO(self.indices, self.values * s, self.shape)
+
+    # -- layout ------------------------------------------------------------
+    def sort_by_mode(self, mode: int) -> "SparseCOO":
+        """Sort nonzeros by coordinate along ``mode`` (improves locality of the
+        Kron-accumulation segment sum, mirroring the paper's reuse of Kronecker
+        products for nonzeros sharing (j, k))."""
+        order = jnp.argsort(self.indices[:, mode], stable=True)
+        return SparseCOO(self.indices[order], self.values[order], self.shape)
+
+    def pad_to(self, target_nnz: int) -> "SparseCOO":
+        """Pad with explicit zeros up to ``target_nnz`` (for even sharding)."""
+        cur = self.indices.shape[0]
+        if target_nnz < cur:
+            raise ValueError(f"cannot pad {cur} nonzeros down to {target_nnz}")
+        if target_nnz == cur:
+            return self
+        pad = target_nnz - cur
+        pad_idx = jnp.zeros((pad, self.ndim), dtype=self.indices.dtype)
+        pad_val = jnp.zeros((pad,), dtype=self.values.dtype)
+        return SparseCOO(
+            jnp.concatenate([self.indices, pad_idx], axis=0),
+            jnp.concatenate([self.values, pad_val], axis=0),
+            self.shape,
+        )
+
+    def linearized_index(self, mode: int) -> np.ndarray:
+        """Column index of each nonzero in the mode-``mode`` unfolding (Eq. 2),
+        Kolda column ordering. Host-side int64 (products like 20000^2
+        overflow int32; this is plan-building metadata, not jit code)."""
+        idx = np.asarray(self.indices)
+        col = np.zeros((idx.shape[0],), dtype=np.int64)
+        stride = 1
+        for k in range(self.ndim):
+            if k == mode:
+                continue
+            col = col + idx[:, k].astype(np.int64) * stride
+            stride *= self.shape[k]
+        return col
+
+
+def unfold_dense(x: jax.Array, mode: int) -> jax.Array:
+    """Mode-n matricization of a dense tensor (Definition 3, Kolda ordering:
+    columns ordered with earlier non-mode axes varying fastest)."""
+    n = x.ndim
+    order = [mode] + [k for k in range(n) if k != mode]
+    # Kolda: X_(n)(i_n, j) with j built from (i_1,...)-fastest — this is
+    # Fortran-order raveling of the remaining axes.
+    xt = jnp.transpose(x, order)
+    rest = [x.shape[k] for k in range(n) if k != mode]
+    # Fortran ravel of trailing axes == reverse + C ravel.
+    xt = jnp.transpose(xt, [0] + list(range(n - 1, 0, -1)))
+    return xt.reshape(x.shape[mode], int(np.prod(rest)) if rest else 1)
+
+
+def fold_dense(mat: jax.Array, mode: int, shape: Sequence[int]) -> jax.Array:
+    """Inverse of :func:`unfold_dense`."""
+    shape = tuple(shape)
+    n = len(shape)
+    rest = [shape[k] for k in range(n) if k != mode]
+    xt = mat.reshape([shape[mode]] + rest[::-1])
+    xt = jnp.transpose(xt, [0] + list(range(n - 1, 0, -1)))
+    inv = np.argsort([mode] + [k for k in range(n) if k != mode])
+    return jnp.transpose(xt, inv)

@@ -1,0 +1,258 @@
+"""HOOI drivers: dense (paper Alg. 1) and sparse (paper Alg. 2).
+
+``hooi_dense``  — standard HOOI: full TTM chain + SVD (or QRP) factor update.
+  This is our stand-in baseline for the dense Tucker accelerator [25] that the
+  paper compares against.
+``hooi_sparse`` — the paper's contribution: COO nonzero-only Kron-accumulation
+  (module 2) + QRP factor update (module 3) + one dense mode-N TTM per sweep
+  for the core (module 1, Eq. 10/12).
+
+Convergence metric: for orthonormal factors produced by SVD/QRP the
+projection identity  ||X - G x {U}||_F^2 = ||X||_F^2 - ||G||_F^2  holds, so
+the relative reconstruction error is computed without ever densifying X.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coo import SparseCOO, fold_dense, unfold_dense
+from repro.core.kron import (
+    KronReusePlan,
+    precompute_kron_reuse,
+    sparse_ttm_chain,
+    sparse_ttm_chain_reuse,
+)
+from repro.core.qrp import qrp, svd_factor
+from repro.core.ttm import ttm_chain, ttm_unfolded
+
+
+@dataclasses.dataclass
+class HooiResult:
+    core: jax.Array  # (R_1, ..., R_N)
+    factors: List[jax.Array]  # U_n: (I_n, R_n), orthonormal columns
+    rel_error: jax.Array  # ||X - Xhat||_F / ||X||_F
+    fit_history: np.ndarray  # per-sweep relative error
+
+
+def _factor_update(y_n: jax.Array, r: int, method: str) -> jax.Array:
+    if method == "svd":
+        return svd_factor(y_n, r)
+    return qrp(y_n, r, method=method)
+
+
+def init_factors(
+    shape: Sequence[int], ranks: Sequence[int], key: jax.Array, orthonormal: bool = True
+) -> List[jax.Array]:
+    """Alg. 2 line 1: random init (orthonormalized for a sane first sweep)."""
+    keys = jax.random.split(key, len(shape))
+    factors = []
+    for k, (i, r) in zip(keys, zip(shape, ranks)):
+        u = jax.random.normal(k, (i, r), dtype=jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+        if orthonormal:
+            u, _ = jnp.linalg.qr(u)
+        factors.append(u)
+    return factors
+
+
+# ---------------------------------------------------------------------------
+# Dense HOOI (paper Alg. 1) — the [25]-style baseline.
+# ---------------------------------------------------------------------------
+
+
+def hooi_dense(
+    x: jax.Array,
+    ranks: Sequence[int],
+    n_iter: int = 5,
+    method: str = "svd",
+    key: Optional[jax.Array] = None,
+    tol: float = 0.0,
+    factors_init: Optional[List[jax.Array]] = None,
+) -> HooiResult:
+    """Standard HOOI on a dense tensor. ``method``: 'svd' (Alg. 1 line 5),
+    'householder' or 'gram' (the paper's QRP replacement, Table II).
+    ``factors_init`` warm-starts the sweep (completion / re-fits)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n = x.ndim
+    ranks = effective_ranks(x.shape, ranks)
+    factors = (
+        [jnp.asarray(f) for f in factors_init]
+        if factors_init is not None
+        else init_factors(x.shape, ranks, key)
+    )
+    xnorm2 = jnp.sum(jnp.square(x.astype(jnp.promote_types(x.dtype, jnp.float32))))
+    hist = []
+    core = None
+    for _ in range(n_iter):
+        for mode in range(n):
+            y = ttm_chain(x, factors, skip=mode, transpose=True)
+            y_n = unfold_dense(y, mode)
+            factors[mode] = _factor_update(y_n, ranks[mode], method)
+        # core from the last power iterate: G = Y x_N U_N^T (Eq. 10).
+        g_n = factors[n - 1].T @ unfold_dense(y, n - 1)
+        core_shape = list(ranks)
+        core = fold_dense(g_n, n - 1, core_shape)
+        err = jnp.sqrt(jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)) / jnp.sqrt(
+            xnorm2
+        )
+        hist.append(float(err))
+        if tol and len(hist) > 1 and abs(hist[-2] - hist[-1]) < tol:
+            break
+    return HooiResult(core, factors, jnp.asarray(hist[-1]), np.asarray(hist))
+
+
+# ---------------------------------------------------------------------------
+# Sparse HOOI (paper Alg. 2) — the paper's accelerator algorithm.
+# ---------------------------------------------------------------------------
+
+
+def effective_ranks(shape: Sequence[int], ranks: Sequence[int]) -> List[int]:
+    """Clamp the multilinear rank to what is representable:
+    R_n <= min(I_n, prod_{t != n} R_t). (A matrix "rank [30,35]" — the
+    paper's angiogram setting — is effectively [30,30]: Y_(n) has only
+    prod_{t!=n} R_t columns, so QRP cannot produce more.) Iterated to a
+    fixpoint since the bound couples the ranks."""
+    r = [min(int(rr), int(s)) for rr, s in zip(ranks, shape)]
+    for _ in range(len(r)):
+        changed = False
+        for m in range(len(r)):
+            bound = int(np.prod([r[t] for t in range(len(r)) if t != m]))
+            if r[m] > bound:
+                r[m] = bound
+                changed = True
+        if not changed:
+            break
+    return r
+
+
+def sparse_sweep(
+    coo: SparseCOO,
+    factors: List[jax.Array],
+    ranks: Sequence[int],
+    method: str,
+    reuse_plans: Optional[Sequence[Optional[KronReusePlan]]] = None,
+) -> Tuple[List[jax.Array], jax.Array]:
+    """One ALS sweep of Alg. 2 (lines 3-9). Returns (factors, core)."""
+    n = coo.ndim
+    y_n = None
+    for mode in range(n):
+        plan = reuse_plans[mode] if reuse_plans is not None else None
+        if plan is not None:
+            y_n = sparse_ttm_chain_reuse(coo, factors, mode, plan)
+        else:
+            y_n = sparse_ttm_chain(coo, factors, mode)
+        factors[mode] = _factor_update(y_n, ranks[mode], method)
+    # Alg. 2 line 9: G <- Y x_N U_N^T on the (dense, small) last unfolding.
+    # y_n is Y_(N): (I_N, R_1*...*R_{N-1}); the TTM module computes
+    # G_(N) = U_N^T Y_(N)  — this is the paper's FPGA TTM (Eq. 12).
+    g_n = ttm_unfolded(y_n.T, factors[n - 1].T).T  # (R_N, prod R_t)
+    core = fold_dense(g_n, n - 1, list(ranks))
+    return factors, core
+
+
+@partial(jax.jit, static_argnames=("shape", "ranks", "method"))
+def _jitted_sweep(indices, values, factors, *, shape, ranks, method):
+    coo = SparseCOO(indices, values, shape)
+    fs, core = sparse_sweep(coo, list(factors), ranks, method, None)
+    return tuple(fs), core
+
+
+def hooi_sparse(
+    coo: SparseCOO,
+    ranks: Sequence[int],
+    n_iter: int = 5,
+    method: str = "householder",
+    key: Optional[jax.Array] = None,
+    tol: float = 0.0,
+    use_kron_reuse: bool = False,
+) -> HooiResult:
+    """The paper's sparse Tucker decomposition (Alg. 2).
+
+    Args:
+      coo: the sparse input tensor (COO, paper Table I).
+      ranks: multilinear rank (R_1..R_N).
+      n_iter: max ALS sweeps ("power iterations" in the paper).
+      method: 'householder' (paper QRP), 'gram' (TPU QRP variant) or 'svd'.
+      use_kron_reuse: enable the paper's Kronecker-row dedup (Sec. III-C).
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n = coo.ndim
+    ranks = effective_ranks(coo.shape, ranks)
+    factors = init_factors(coo.shape, ranks, key)
+    plans = (
+        [precompute_kron_reuse(coo, m) for m in range(n)] if use_kron_reuse else None
+    )
+    xnorm2 = jnp.square(coo.norm())
+    hist = []
+    core = None
+    for _ in range(n_iter):
+        if plans is None:
+            fs, core = _jitted_sweep(
+                coo.indices, coo.values, tuple(factors),
+                shape=coo.shape, ranks=tuple(ranks), method=method,
+            )
+            factors = list(fs)
+        else:
+            factors, core = sparse_sweep(coo, factors, ranks, method, plans)
+        err = jnp.sqrt(jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)) / jnp.sqrt(
+            xnorm2
+        )
+        hist.append(float(err))
+        if tol and len(hist) > 1 and abs(hist[-2] - hist[-1]) < tol:
+            break
+    return HooiResult(core, factors, jnp.asarray(hist[-1]), np.asarray(hist))
+
+
+def tucker_complete_dense(
+    coo: SparseCOO,
+    ranks: Sequence[int],
+    n_rounds: int = 10,
+    n_iter: int = 2,
+    method: str = "gram",
+    key: Optional[jax.Array] = None,
+) -> HooiResult:
+    """EM-style Tucker completion (paper use cases: MRI reconstruction [27],
+    process-variation prediction [15]): alternate HOOI with imputation of the
+    missing entries from the current reconstruction. Dense working set —
+    intended for the small/medium completion problems of those applications;
+    the pod-scale path keeps X sparse (core.distributed).
+    """
+    from repro.core.reconstruct import reconstruct_dense
+
+    x_obs = coo.to_dense()
+    mask = SparseCOO(
+        coo.indices, jnp.ones_like(coo.values), coo.shape
+    ).to_dense() > 0
+    x = x_obs
+    res = None
+    factors = None
+    for _ in range(n_rounds):
+        res = hooi_dense(x, ranks, n_iter=n_iter, method=method, key=key,
+                         factors_init=factors)
+        factors = res.factors  # warm start: EM converges in a few rounds
+        xhat = reconstruct_dense(res.core, res.factors)
+        x = jnp.where(mask, x_obs, xhat)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Operation-count accounting (paper Sections III-B/C/D; used by benchmarks).
+# ---------------------------------------------------------------------------
+
+
+def sweep_call_counts(
+    shape: Sequence[int], ranks: Sequence[int], nnz: int, n_iter: int
+) -> dict:
+    """The paper reports per-dataset totals: #QRP calls, #Kron calls, #TTM.
+    One sweep does N QRP calls and nnz*N Kron rows; one TTM per sweep."""
+    n = len(shape)
+    return {
+        "qrp_calls": n * n_iter + (n - 1),  # paper counts: e.g. Amazon 9 = ...
+        "kron_calls": nnz * n_iter,
+        "ttm_calls": n_iter,
+    }

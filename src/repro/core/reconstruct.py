@@ -1,0 +1,61 @@
+"""Reconstruction utilities for Tucker results (Eq. 7)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coo import SparseCOO
+from repro.core.kron import kron_rows
+from repro.core.ttm import ttm_chain
+
+
+def reconstruct_dense(core: jax.Array, factors: Sequence[jax.Array]) -> jax.Array:
+    """Xhat = G x_1 U_1 x_2 U_2 ... x_N U_N (Eq. 7)."""
+    return ttm_chain(core, list(factors), transpose=False)
+
+
+def reconstruct_at(
+    core: jax.Array, factors: Sequence[jax.Array], indices: jax.Array
+) -> jax.Array:
+    """Evaluate Xhat only at the given (nnz, N) coordinates — O(nnz * prod R)
+    instead of densifying; the sparse-world dual of Eq. 7:
+    xhat_i = <G, kron_t U_t(i_t, :)> ."""
+    n = core.ndim
+    rows = [factors[t][indices[:, t]] for t in range(n - 1, -1, -1)]
+    k = kron_rows(rows)  # (nnz, prod R) with mode-1 fastest (Kolda order)
+    # core flattened in the same (Kolda / Fortran over ascending modes) order:
+    g = core
+    g_flat = jnp.transpose(g, list(range(n - 1, -1, -1))).reshape(-1)
+    return k @ g_flat
+
+
+def relative_error_dense(
+    x: jax.Array, core: jax.Array, factors: Sequence[jax.Array]
+) -> jax.Array:
+    xhat = reconstruct_dense(core, factors)
+    x32 = x.astype(jnp.float32)
+    return jnp.linalg.norm((x32 - xhat).reshape(-1)) / jnp.linalg.norm(x32.reshape(-1))
+
+
+def relative_error_projection(
+    xnorm2: jax.Array, core: jax.Array
+) -> jax.Array:
+    """||X - Xhat||/||X|| via the orthonormal-projection identity."""
+    return jnp.sqrt(jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0) / xnorm2)
+
+
+def compression_ratio(shape: Sequence[int], ranks: Sequence[int],
+                      include_factors: bool = True) -> float:
+    """Dense storage / Tucker storage. With ``include_factors=False`` only
+    the core is counted — the convention under which the paper's angiogram
+    number (18.57x for rank [30,35] on 130x150) reproduces exactly; the
+    factor-inclusive ratio (1.91x) is also reported in our benchmarks."""
+    import numpy as np
+
+    dense = float(np.prod(shape))
+    tucker = float(np.prod(ranks))
+    if include_factors:
+        tucker += float(sum(i * r for i, r in zip(shape, ranks)))
+    return dense / tucker

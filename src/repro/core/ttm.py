@@ -1,0 +1,64 @@
+"""Tensor-times-matrix (TTM) — Definition 4 / paper module 1 (Section III-B).
+
+``ttm(X, U, n)`` computes ``X ×_n U`` with ``U: (J, I_n)``; equivalently
+``G_(n) = U @ X_(n)`` (Eq. 5). The paper's FPGA module computes the special
+case ``G = Y ×_N U_Nᵀ`` (Eq. 10-12) on the *unfolded* dense tensor in row
+batches of b=32; our TPU analogue of that batched module lives in
+``repro.kernels.ttm_kernel`` — this file is the mathematical layer used by the
+algorithm driver and as the kernels' oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coo import fold_dense, unfold_dense
+
+
+def ttm(x: jax.Array, u: jax.Array, mode: int) -> jax.Array:
+    """Dense mode-``mode`` product  X ×_mode U  with U of shape (J, I_mode)."""
+    if u.shape[1] != x.shape[mode]:
+        raise ValueError(f"U {u.shape} does not contract with mode {mode} of {x.shape}")
+    moved = jnp.moveaxis(x, mode, -1)
+    out = jnp.einsum("...i,ji->...j", moved, u)
+    return jnp.moveaxis(out, -1, mode)
+
+
+def ttm_unfolded(y_mat: jax.Array, u: jax.Array) -> jax.Array:
+    """The paper's TTM on unfolded operands: ``G = Y @ Uᵀ`` where
+    ``Y: (R1R2, I3)`` holds mode-3-fiber rows and ``U: (R3, I3)``.
+
+    This is exactly Alg. 3's loop nest (tmp[i,k] += Y[i,t]·U[k,t]) collapsed
+    to a matmul; the Pallas kernel tiles this contraction for VMEM/MXU.
+    """
+    return jnp.einsum("it,kt->ik", y_mat, u)
+
+
+def ttm_chain(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    skip: Optional[int] = None,
+    transpose: bool = True,
+) -> jax.Array:
+    """Dense TTM chain  X ×_1 U_1ᵀ ... ×_N U_Nᵀ  (optionally skipping one mode).
+
+    With ``transpose=True`` each factor U_n of shape (I_n, R_n) is applied as
+    U_nᵀ (the HOOI power-iteration direction, Eq. 9); with ``False`` factors
+    are applied directly (reconstruction direction, Eq. 7).
+    """
+    out = x
+    for n, u in enumerate(factors):
+        if skip is not None and n == skip:
+            continue
+        out = ttm(out, u.T if transpose else u, n)
+    return out
+
+
+def mode_unfold_matmul(x: jax.Array, u: jax.Array, mode: int) -> jax.Array:
+    """Reference implementation of Eq. 5: fold(U @ unfold(X, n))."""
+    g_n = u @ unfold_dense(x, mode)
+    new_shape = list(x.shape)
+    new_shape[mode] = u.shape[0]
+    return fold_dense(g_n, mode, new_shape)

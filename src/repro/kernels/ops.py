@@ -1,0 +1,99 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True unless a TPU is present — this container is
+CPU-only, so kernels validate in interpret mode; on a v5e pod the same call
+sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coo import SparseCOO
+from repro.kernels import kron_kernel, ttm_kernel
+from repro.kernels.kron_kernel import ScatterPlan, build_scatter_plan
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ttm(y: jax.Array, u: jax.Array, *, bl: Optional[int] = None, bk: Optional[int] = None,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """Paper TTM module: G = Y @ U^T (Eq. 12) via the Pallas kernel."""
+    kw = {}
+    if bl is not None:
+        kw["bl"] = bl
+    if bk is not None:
+        kw["bk"] = bk
+    return ttm_kernel.ttm_pallas(
+        y, u, interpret=default_interpret() if interpret is None else interpret, **kw
+    )
+
+
+def kron_contrib(a: jax.Array, b: jax.Array, v: jax.Array, *,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Paper Kronecker module (Alg. 4) over a batch of nonzeros."""
+    return kron_kernel.kron_contrib_pallas(
+        a, b, v, interpret=default_interpret() if interpret is None else interpret
+    )
+
+
+def sparse_ttm_chain_kernel(
+    coo: SparseCOO,
+    factors: Sequence[jax.Array],
+    skip_mode: int,
+    plan: Optional[ScatterPlan] = None,
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Full Alg. 2 line 5 on the kernel path: gather rows -> Kron kernel ->
+    one-hot-matmul scatter kernel. 3-way tensors only (the paper's case);
+    higher orders fall back to chained kron_contrib calls.
+
+    The ``plan`` (host-side sort/group of nonzeros by output row block) plays
+    the role of the paper's FPGA dataflow schedule; build it once per
+    (tensor, mode) and reuse across sweeps.
+    """
+    interp = default_interpret() if interpret is None else interpret
+    n = coo.ndim
+    n_rows = coo.shape[skip_mode]
+    if plan is None:
+        plan = build_scatter_plan(np.asarray(coo.indices[:, skip_mode]), n_rows)
+    order = jnp.asarray(plan.order)
+    valid = jnp.asarray(plan.valid)
+    idx = coo.indices[order]
+    vals = coo.values[order] * valid
+
+    modes = [t for t in range(n - 1, -1, -1) if t != skip_mode]
+    rows = [factors[t][idx[:, t]] for t in modes]
+    contrib = kron_contrib(rows[0], rows[1], vals, interpret=interp)
+    for extra in rows[2:]:  # order > 3: fold further factors in
+        contrib = kron_contrib(contrib, extra, jnp.ones_like(vals), interpret=interp)
+    return kron_kernel.scatter_rows_pallas(contrib, plan, n_rows, interpret=interp)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """Blockwise (FlashAttention-style) causal GQA attention kernel."""
+    from repro.kernels import flash_attention as fa
+
+    return fa.flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=default_interpret() if interpret is None else interpret,
+    )
+
+
+def ssd_chunk(x, a_cumsum, b_mat, c_mat, *, interpret: Optional[bool] = None):
+    """Mamba-2 SSD within-chunk kernel (diag block + outgoing chunk state)."""
+    from repro.kernels import ssd_scan
+
+    return ssd_scan.ssd_chunk_pallas(
+        x, a_cumsum, b_mat, c_mat,
+        interpret=default_interpret() if interpret is None else interpret,
+    )

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ttm_ref(y: jax.Array, u: jax.Array) -> jax.Array:
+    """Oracle for ttm_kernel: G = Y @ U^T (paper Eq. 12)."""
+    return (y.astype(jnp.float32) @ u.astype(jnp.float32).T).astype(jnp.float32)
+
+
+def kron_contrib_ref(a: jax.Array, b: jax.Array, v: jax.Array) -> jax.Array:
+    """Oracle for kron_contrib: v[t] * (a[t] (x) b[t]), Rb fastest."""
+    nnz = a.shape[0]
+    k = (a[:, :, None] * b[:, None, :]).reshape(nnz, -1)
+    return (k * v[:, None]).astype(jnp.float32)
+
+
+def scatter_rows_ref(contrib: jax.Array, rows: jax.Array, n_rows: int) -> jax.Array:
+    """Oracle for scatter_rows: segment-sum of contrib rows by target row."""
+    out = jnp.zeros((n_rows, contrib.shape[1]), dtype=jnp.float32)
+    return out.at[rows].add(contrib.astype(jnp.float32))
+
+
+def sparse_ttm_chain_ref(indices, values, factors, skip_mode, n_rows):
+    """Oracle for the fused sparse chain — mirrors core.kron.sparse_ttm_chain."""
+    ndim = indices.shape[1]
+    rows = []
+    for t in range(ndim - 1, -1, -1):
+        if t == skip_mode:
+            continue
+        rows.append(factors[t][indices[:, t]])
+    k = rows[0]
+    for r in rows[1:]:
+        k = (k[:, :, None] * r[:, None, :]).reshape(k.shape[0], -1)
+    contrib = k.astype(jnp.float32) * values.astype(jnp.float32)[:, None]
+    out = jnp.zeros((n_rows, k.shape[1]), dtype=jnp.float32)
+    return out.at[indices[:, skip_mode]].add(contrib)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True, scale=None
+) -> jax.Array:
+    """Oracle for flash_attention: plain softmax attention with GQA.
+
+    q: (B, H, S, D); k, v: (B, KVH, T, D) with H = KVH * G.
+    """
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, kvh, g, s, d).astype(jnp.float32)
+    logits = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32)) * scale
+    t = k.shape[2]
+    if causal:
+        # align the causal diagonal to the *end* of the kv sequence (decode
+        # convention: the last query attends to everything).
+        qpos = jnp.arange(s) + (t - s)
+        kpos = jnp.arange(t)
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d)
+
+
+def ssd_chunk_ref(x, a_cumsum, b_mat, c_mat):
+    """Oracle for the SSD within-chunk diagonal block (Mamba-2, SSD duality).
+
+    Shapes (single chunk):  x (L, P), a_cumsum (L,), b_mat (L, N), c_mat (L, N).
+    y[i] = sum_{j<=i} exp(A[i]-A[j]) * (c[i]·b[j]) * x[j]
+    plus the chunk's outgoing state  S = sum_j exp(A[L-1]-A[j]) b[j] x[j]^T.
+    """
+    l = x.shape[0]
+    decay = jnp.exp(a_cumsum[:, None] - a_cumsum[None, :])  # (L, L)
+    mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+    cb = (c_mat @ b_mat.T) * jnp.where(mask, decay, 0.0)
+    y = cb @ x
+    state_decay = jnp.exp(a_cumsum[-1] - a_cumsum)  # (L,)
+    s = (b_mat * state_decay[:, None]).T @ x  # (N, P)
+    return y, s

@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This flag lives ONLY here — tests/benches see the real (1-device) CPU.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the step function (train_step / prefill_step / serve_step per
+the shape's kind) is jit'd with the schema-derived shardings and compiled
+against ShapeDtypeStruct inputs — no allocation. We record:
+
+  * memory_analysis()  -> per-device bytes (argument/output/temp/peak)
+  * cost_analysis()    -> XLA's flops/bytes (while bodies counted once)
+  * HLO analysis       -> trip-count-corrected dot FLOPs, HBM traffic
+                          approximation, per-kind collective bytes
+                          (repro.utils.hlo)
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.configs.registry import ASSIGNED_ARCHS
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.models.sharding import DEFAULT_RULES, RULES_SERVE, RULES_TRAIN, ShardingRules
+from repro.train.step import make_train_step, train_state_specs
+from repro.utils import hlo as hlo_lib
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules: ShardingRules | None = None, save_hlo: str = "",
+             cfg_overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if rules is None:
+        # prefill is batch-compute-heavy like training -> ZeRO-3 weights;
+        # decode cannot amortize per-layer weight gathers -> TP-resident.
+        rules = RULES_SERVE if shape.kind == "decode" else RULES_TRAIN
+    ok, why = shape_applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    specs = input_specs(cfg, shape, mesh, rules)
+    (pshapes, oshapes), (pshard, oshard) = train_state_specs(cfg, mesh, rules)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, mesh, rules)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, specs["batch_shardings"]),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(pshapes, oshapes, specs["batch_shapes"])
+    elif shape.kind == "prefill":
+        step = model_lib.make_prefill_step(cfg, mesh, rules)
+        jitted = jax.jit(step, in_shardings=(pshard, specs["batch_shardings"]))
+        lowered = jitted.lower(pshapes, specs["batch_shapes"])
+    else:  # decode
+        step = model_lib.make_serve_step(cfg, mesh, rules)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, specs["cache_shardings"], specs["batch_shardings"]),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(pshapes, specs["cache_shapes"], specs["batch_shapes"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    summary = hlo_lib.analyze_hlo(txt)
+    if save_hlo:
+        Path(save_hlo).write_text(txt)
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            peak_bytes=mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+            # host-backend artifact: XLA CPU float-normalization upcasts
+            # loop-resident bf16 weight stacks to f32 at ENTRY (no native
+            # bf16 matmul on CPU). A TPU executes those dots natively, so
+            # the TPU peak estimate subtracts the measured entry upcasts.
+            entry_upcast_bytes=summary.entry_upcast_bytes,
+            peak_tpu_est_bytes=(
+                mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                - summary.entry_upcast_bytes
+            ),
+        ),
+        cost=dict(
+            xla_flops=cost.get("flops", 0.0),
+            xla_bytes=cost.get("bytes accessed", 0.0),
+        ),
+        hlo=dict(
+            dot_flops=summary.dot_flops,
+            io_bytes=summary.io_bytes,
+            coll_bytes=summary.coll_bytes,
+            total_coll_bytes=summary.total_coll_bytes,
+            coll_xpod_bytes=summary.coll_xpod_bytes,
+            trip_counts=summary.trip_counts,
+        ),
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+        tokens=shape.tokens if shape.kind != "decode" else shape.global_batch,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape_name in SHAPES:
+                cells.append((arch, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    results = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            label = f"{arch}/{shape_name}/{'2x16x16' if mp else '16x16'}"
+            try:
+                rec = run_cell(arch, shape_name, mp, save_hlo=args.save_hlo)
+            except Exception as e:  # a failure here is a sharding bug
+                rec = {
+                    "arch": arch, "shape": shape_name,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:],
+                }
+            results.append(rec)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                gb = rec["memory"]["peak_bytes"] / 2**30
+                gb_est = rec["memory"]["peak_tpu_est_bytes"] / 2**30
+                extra = (f" compile={rec['compile_s']:.1f}s"
+                         f" peak={gb:.2f}GiB/dev (tpu~{gb_est:.2f})"
+                         f" dotTF={rec['hlo']['dot_flops']/1e12:.2f}"
+                         f" coll={rec['hlo']['total_coll_bytes']/2**30:.2f}GiB")
+            elif status == "error":
+                extra = " " + rec["error"][:160]
+            print(f"[{status:7s}] {label}{extra}", flush=True)
+    if args.out:
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(results, indent=1))
+        print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

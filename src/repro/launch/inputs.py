@@ -1,0 +1,118 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` builds the exact pytrees each step function consumes —
+weak-type-correct, shardable, zero allocation — for train / prefill / decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.mamba2 import SsmState
+from repro.models.sharding import ShardingRules, named_sharding
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules: ShardingRules
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(shapes, shardings) for the step's ``batch`` argument."""
+    b, s = shape.global_batch, shape.seq_len
+    ns = lambda logical, shp: named_sharding(logical, rules, mesh, shp)
+    if shape.kind in ("train", "prefill"):
+        shapes: Dict[str, Any] = {}
+        shard: Dict[str, Any] = {}
+        if cfg.frontend != "none":
+            shapes["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+            shard["embeds"] = ns(("batch", "seq", "none"), (b, s, cfg.d_model))
+        else:
+            shapes["tokens"] = _sds((b, s), jnp.int32)
+            shard["tokens"] = ns(("batch", "seq"), (b, s))
+        if shape.kind == "train":
+            shapes["labels"] = _sds((b, s), jnp.int32)
+            shard["labels"] = ns(("batch", "seq"), (b, s))
+        return shapes, shard
+    # decode: one new token against a seq_len cache
+    shapes = {"pos": _sds((), jnp.int32)}
+    shard = {"pos": NamedSharding(mesh, P())}
+    if cfg.frontend != "none":
+        shapes["embed"] = _sds((b, 1, cfg.d_model), jnp.bfloat16)
+        shard["embed"] = ns(("batch", "none", "none"), (b, 1, cfg.d_model))
+    else:
+        shapes["token"] = _sds((b, 1), jnp.int32)
+        shard["token"] = ns(("batch", "none"), (b, 1))
+    return shapes, shard
+
+
+def cache_specs(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules: ShardingRules
+) -> Tuple[Any, Any]:
+    """(shapes, shardings) for the decode KV/SSM cache."""
+    b, s = shape.global_batch, shape.seq_len
+    l = cfg.n_layers
+    hd = cfg.resolved_head_dim
+    ns = lambda logical, shp: named_sharding(logical, rules, mesh, shp)
+
+    def attn_cache(lead: Tuple[int, ...], lead_log: Tuple[str, ...]):
+        shp = lead + (b, s, cfg.n_kv_heads, hd)
+        logical = lead_log + ("batch", "kvseq", "none", "none")
+        # u16 = bit-packed bf16 storage (models.layers.pack_bf16)
+        return (
+            {"k": _sds(shp, jnp.uint16), "v": _sds(shp, jnp.uint16)},
+            {"k": ns(logical, shp), "v": ns(logical, shp)},
+        )
+
+    def ssm_cache(lead: Tuple[int, ...], lead_log: Tuple[str, ...]):
+        km1 = cfg.ssm_conv - 1
+        din, gn = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state
+        nh, p_, n_ = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+        shapes = SsmState(
+            conv_x=_sds(lead + (b, km1, din), jnp.uint16),
+            conv_b=_sds(lead + (b, km1, gn), jnp.uint16),
+            conv_c=_sds(lead + (b, km1, gn), jnp.uint16),
+            h=_sds(lead + (b, nh, p_, n_), jnp.float32),
+        )
+        shard = SsmState(
+            conv_x=ns(lead_log + ("batch", "none", "tp"), shapes.conv_x.shape),
+            conv_b=ns(lead_log + ("batch", "none", "tp"), shapes.conv_b.shape),
+            conv_c=ns(lead_log + ("batch", "none", "tp"), shapes.conv_c.shape),
+            h=ns(lead_log + ("batch", "tp", "none", "none"), shapes.h.shape),
+        )
+        return shapes, shard
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return attn_cache((l,), ("layers",))
+    if cfg.family == "ssm":
+        return ssm_cache((l,), ("layers",))
+    if cfg.family == "hybrid":
+        n_sb = cfg.n_layers // cfg.hybrid_period
+        ssm_shapes, ssm_shard = ssm_cache(
+            (n_sb, cfg.hybrid_period), ("layers", "layers")
+        )
+        attn_shapes, attn_shard = attn_cache((n_sb,), ("layers",))
+        return (
+            {"ssm": ssm_shapes, "attn": attn_shapes},
+            {"ssm": ssm_shard, "attn": attn_shard},
+        )
+    raise ValueError(cfg.family)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                rules: ShardingRules):
+    """Everything the dry-run needs for this cell: a dict with the step
+    argument shapes/shardings (params & opt state come from the model/optim
+    schemas)."""
+    bshapes, bshard = batch_specs(cfg, shape, mesh, rules)
+    out = {"batch_shapes": bshapes, "batch_shardings": bshard}
+    if shape.kind == "decode":
+        cshapes, cshard = cache_specs(cfg, shape, mesh, rules)
+        out["cache_shapes"] = cshapes
+        out["cache_shardings"] = cshard
+    return out

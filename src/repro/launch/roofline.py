@@ -1,0 +1,121 @@
+"""Roofline analysis over dry-run records (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), in seconds-per-step:
+
+  compute    = FLOPs / (chips * 197e12)       [bf16 v5e]
+  memory     = HBM bytes / (chips * 819e9)
+  collective = collective bytes per device / link bandwidth
+               (ICI 50 GB/s; the "pod"-crossing share runs at DCN 25 GB/s —
+               single-number bound uses ICI, per-kind split is recorded)
+
+Sources:
+  * FLOPs / HBM bytes: the analytic cell model (repro.models.flops) — exact
+    for this implementation; the HLO dot parse (a structural lower bound on
+    the same program) and XLA's cost_analysis are carried as diagnostics.
+    See EXPERIMENTS.md §Roofline-methodology for why the host backend's
+    op-level numbers cannot be used directly.
+  * collective bytes: parsed from the compiled partitioned HLO with
+    while-trip multipliers (repro.utils.hlo) — measured, per device.
+  * memory fit: memory_analysis() per device (argument+temp), with the
+    measured host-only f32-upcast artifact subtracted for the TPU estimate.
+
+Also reported: MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (serve),
+useful ratio MODEL_FLOPS/FLOPs (remat/dispatch/masking waste), dominant
+term, and the roofline fraction (useful time / dominant-term time).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s/link
+DCN_BW = 25e9  # pod-crossing axis
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def chips(rec: dict) -> int:
+    return 512 if rec["mesh"] == "2x16x16" else 256
+
+
+def roofline_terms(rec: dict) -> Dict[str, float]:
+    from repro.configs import SHAPES, get_config
+    from repro.models.flops import cell_cost
+
+    cfg = get_config(rec["arch"])
+    cost = cell_cost(cfg, SHAPES[rec["shape"]])
+    c = chips(rec)
+    compute_s = cost.flops / (c * PEAK_FLOPS)
+    memory_s = cost.hbm_bytes / (c * HBM_BW)
+    coll_bytes = rec["hlo"]["total_coll_bytes"]  # per device, measured
+    collective_s = coll_bytes / ICI_BW
+    mf = cost.model_flops
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    dominant = max(terms.items(), key=lambda kv: kv[1])[0].replace("_s", "")
+    bound = max(terms.values())
+    useful = mf / cost.flops if cost.flops else 0.0
+    mfu_bound = (mf / c / PEAK_FLOPS) / bound if bound else 0.0
+    mem = rec.get("memory", {})
+    return dict(
+        **terms,
+        dominant=dominant,
+        model_flops=mf,
+        useful_ratio=useful,
+        roofline_frac=mfu_bound,
+        hlo_dot_flops=rec["hlo"]["dot_flops"] * c,  # diagnostic (global)
+        fits=(mem.get("peak_tpu_est_bytes", 0) or 0) <= HBM_PER_CHIP,
+        peak_gib=(mem.get("peak_tpu_est_bytes", 0) or 0) / 2**30,
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | compute ms | memory ms | collective ms "
+    "| dominant | useful | roofline | peak GiB (tpu est) | fits |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def fmt_row(rec: dict) -> str:
+    t = roofline_terms(rec)
+    return (
+        f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+        f"| {t['compute_s']*1e3:9.2f} | {t['memory_s']*1e3:9.2f} "
+        f"| {t['collective_s']*1e3:9.2f} | {t['dominant']:10s} "
+        f"| {t['useful_ratio']:6.3f} | {t['roofline_frac']:6.3f} "
+        f"| {t['peak_gib']:6.2f} | {'y' if t['fits'] else 'NO'} |"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("records", help="dryrun JSON")
+    ap.add_argument("--md", default="", help="write markdown table here")
+    args = ap.parse_args()
+    recs = json.loads(Path(args.records).read_text())
+    lines = [HEADER]
+    for rec in recs:
+        if rec.get("status") == "skipped":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec.get('mesh','-')} "
+                f"| skipped: {rec.get('reason','')[:58]} | | | | | | | |"
+            )
+            continue
+        if rec.get("status") != "ok":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec.get('mesh','-')} "
+                f"| ERROR {rec.get('error','')[:60]} | | | | | | | |"
+            )
+            continue
+        lines.append(fmt_row(rec))
+    out = "\n".join(lines)
+    print(out)
+    if args.md:
+        Path(args.md).write_text(out + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""GQA attention: blockwise (flash-style) jnp path + cached decode path.
+
+The jnp chunked path is what the distributed dry-run lowers (XLA:TPU fuses
+it well and GSPMD can partition it); the Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU hot-path equivalent, validated
+against the same oracle. Chunking bounds the live logits to
+(tokens_local, attn_chunk) instead of (tokens, seq) — mandatory for
+prefill_32k at pod scale.
+
+Layouts:  q (b, s, H, hd);  k, v (b, t, KV, hd);  H = KV * G.
+Causal convention: the diagonal is aligned to the *end* of the kv axis
+(query i attends to kv j iff  j <= i + t - s), serving train (s == t),
+chunked prefill and single-token decode (s == 1) with one code path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _chunk_attn(
+    q: jax.Array,  # (b, s, KV, G, hd) f32
+    k: jax.Array,  # (b, ck, KV, hd)
+    v: jax.Array,
+    qpos: jax.Array,  # (s,)
+    kpos: jax.Array,  # (ck,)
+    scale: float,
+    causal: bool,
+    m: jax.Array,  # (b, s, KV, G)
+    l: jax.Array,
+    acc: jax.Array,  # (b, s, KV, G, hd)
+):
+    logits = jnp.einsum(
+        "bskgd,btkd->bskgt", q, k.astype(jnp.float32), preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        # additive 2-D bias (s, ck): tiny, loop-invariant-hoist-friendly —
+        # a full-logits-shaped where() false-branch would be hoisted out of
+        # the layer scan as a multi-hundred-MB broadcast.
+        bias = jnp.where(qpos[:, None] >= kpos[None, :], 0.0, NEG_INF)
+        logits = logits + bias[None, :, None, None, :]
+    m_cur = jnp.max(logits, axis=-1)
+    m_new = jnp.maximum(m, m_cur)
+    p = jnp.exp(logits - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bskgt,btkd->bskgd", p, v.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    return m_new, l_new, acc_new
+
+
+def gqa_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    chunk: int = 2048,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Blockwise online-softmax GQA attention (train / prefill path)."""
+    b, s, h, hd = q.shape
+    _, t, kvh, _ = k.shape
+    g = h // kvh
+    scale_ = scale if scale is not None else 1.0 / float(np.sqrt(hd))
+    qg = q.reshape(b, s, kvh, g, hd).astype(jnp.float32)
+    qpos = jnp.arange(s) + (t - s)
+
+    ck = min(chunk, t)
+    if t % ck:  # pad kv to a chunk multiple; padded keys masked via kpos
+        pad = ck - t % ck
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // ck
+    m0 = jnp.full((b, s, kvh, g), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, s, kvh, g), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, s, kvh, g, hd), dtype=jnp.float32)
+
+    if n_chunks == 1:
+        kpos = jnp.arange(t)
+        m, l, acc = _chunk_attn(qg, k[:, :t], v[:, :t], qpos, kpos, scale_,
+                                True, m0, l0, acc0)
+    else:
+        # lax.scan over kv chunks: one chunk of (s_local, ck) logits live at
+        # a time (the flash invariant). The roofline harness multiplies this
+        # inner while body by its trip count like the layer scan.
+        kc = jnp.moveaxis(k.reshape(b, n_chunks, ck, kvh, hd), 1, 0)
+        vc = jnp.moveaxis(v.reshape(b, n_chunks, ck, kvh, hd), 1, 0)
+
+        def chunk_body(carry, xs):
+            m, l, acc = carry
+            kc_, vc_, c = xs
+            kpos = c * ck + jnp.arange(ck)
+            # padded kv rows have kpos >= t > every qpos offset -> masked by
+            # the causal bias (diagonal aligned to the true end t).
+            m, l, acc = _chunk_attn(qg, kc_, vc_, qpos, kpos, scale_, True,
+                                    m, l, acc)
+            return (m, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            chunk_body, (m0, l0, acc0),
+            (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32)),
+        )
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l[..., None]
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (b, 1, H, hd)
+    k_cache: jax.Array,  # (b, S, KV, hd)
+    v_cache: jax.Array,
+    pos: jax.Array,  # scalar: number of live cache entries (q is at pos)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against a pre-allocated cache. No chunking —
+    logits are (b, H, S) which is small; the kv axis may be seq-sharded and
+    GSPMD turns the softmax/contraction into ring-style collectives."""
+    b, _, h, hd = q.shape
+    _, smax, kvh, _ = k_cache.shape
+    g = h // kvh
+    scale_ = scale if scale is not None else 1.0 / float(np.sqrt(hd))
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bkgd,btkd->bkgt", qg, k_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale_
+    live_bias = jnp.where(jnp.arange(smax) <= pos, 0.0, NEG_INF)  # (S,) 1-D
+    logits = logits + live_bias[None, None, None, :]
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -1,0 +1,79 @@
+"""Common NN layers (pure JAX; no flax)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : hd // 2], x32[..., hd // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ wg) * (x @ wi)
+    return h @ wo
+
+
+def softmax_cross_entropy(
+    logits: jax.Array, labels: jax.Array, vocab_size: int
+) -> jax.Array:
+    """Mean CE over tokens; logits (..., Vp) may be vocab-padded — padded ids
+    are excluded via the iota mask. GSPMD-friendly: the label logit is picked
+    with a fused where+sum over the (possibly vocab-sharded) last dim."""
+    vp = logits.shape[-1]
+    logits32 = logits.astype(jnp.float32)
+    # 1-D additive pad mask (broadcast-add fuses; a full-shaped where()
+    # false branch would materialize as a hoisted giant broadcast).
+    pad_bias = jnp.where(jnp.arange(vp) < vocab_size, 0.0, -1e30)
+    logits32 = logits32 + pad_bias
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    onehot = (iota == labels[..., None]).astype(jnp.float32)
+    label_logit = jnp.sum(logits32 * onehot, axis=-1)
+    return jnp.mean(lse - label_logit)
+
+
+def init_normal(key: jax.Array, shape, scale: float, dtype) -> jax.Array:
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def pack_bf16(x: jax.Array) -> jax.Array:
+    """bf16 -> u16 bit-pattern for *storage* across scan boundaries / caches.
+
+    Semantically a no-op (pure bitcast, zero copies on TPU). Purpose: the
+    host backend's float-normalization pass upcasts bf16 dynamic-update-slice
+    and carry buffers to f32 (2x memory) because CPUs lack native bf16;
+    integer buffers are left alone, so the dry-run's memory_analysis matches
+    what the TPU target would allocate."""
+    if x.dtype == jnp.bfloat16:
+        return jax.lax.bitcast_convert_type(x, jnp.uint16)
+    return x
+
+
+def unpack_bf16(x: jax.Array) -> jax.Array:
+    if x.dtype == jnp.uint16:
+        return jax.lax.bitcast_convert_type(x, jnp.bfloat16)
+    return x

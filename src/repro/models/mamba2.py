@@ -1,0 +1,242 @@
+"""Mamba-2 (SSD / state-space duality) sequence mixer — arXiv:2405.21060.
+
+Chunked SSD: the sequence is split into chunks of length ``ssm_chunk``;
+within-chunk quadratic blocks are matmuls (MXU-friendly; Pallas kernel in
+``repro.kernels.ssd_scan`` is the TPU hot path with identical math), and the
+inter-chunk state recurrence  h_{c+1} = decay_c * h_c + S_c  is a short
+``associative_scan`` (log-depth, full-array ops — GSPMD partitions it over
+the heads axis).
+
+Projections are kept *separate* (wz/wx/wb/wc/wdt) instead of one fused
+in_proj so each output dim can carry its own sharding annotation (tp over
+d_inner / heads) without slicing a sharded flat dim.
+
+Sharding: activations (b, s, d) replicated over "model"; all inner tensors
+(d_inner, heads) are tp-sharded; the seq axis stays whole because of the
+causal depthwise conv (no halo exchange in the baseline layout).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import pack_bf16, rmsnorm, unpack_bf16
+
+
+class SsmState(NamedTuple):
+    conv_x: jax.Array  # (b, k-1, d_inner) rolling conv inputs (x stream)
+    conv_b: jax.Array  # (b, k-1, g*n)
+    conv_c: jax.Array  # (b, k-1, g*n)
+    h: jax.Array  # (b, heads, headdim, state)
+
+
+def _depthwise_causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (b, s, c), w (c, k): causal depthwise conv along s."""
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum of k shifted scalings — cheap, fusion-friendly, GSPMD-safe on the
+    # channel-sharded dim (no spatial halo). Weight convention: w[:, k-1]
+    # multiplies the current token (matches the decode-step rolling window).
+    out = jnp.zeros_like(x, shape=x.shape)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[None, None, :, i]
+    return out
+
+
+def ssd_mixer(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (b, s, d)
+    state: Optional[SsmState] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[SsmState]]:
+    """Full-sequence (train/prefill) SSD mixer. Returns (y, final_state)."""
+    b, s_orig, d = x.shape
+    h_dim, n_heads = cfg.ssm_headdim, cfg.ssm_nheads
+    n_state, n_groups = cfg.ssm_state, cfg.ssm_ngroups
+    din = cfg.d_inner
+    chunk = min(cfg.ssm_chunk, s_orig)
+    # pad seq to a chunk multiple; padded positions are neutralized below
+    # (dt = 0 -> no decay, no state contribution), so y[:s] and the final
+    # state are exact.
+    pad = (-s_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    n_chunks = s // chunk
+
+    z = x @ p["wz"]  # (b, s, din)
+    xin = x @ p["wx"]  # (b, s, din)
+    bproj = x @ p["wb"]  # (b, s, g*n)
+    cproj = x @ p["wc"]  # (b, s, g*n)
+    dt = jax.nn.softplus(x @ p["wdt"] + p["dt_bias"])  # (b, s, heads)
+
+    # separate depthwise conv per stream: each channel group keeps its own
+    # tp sharding (no concat across differently-sharded dims).
+    xin = jax.nn.silu(_depthwise_causal_conv(xin, p["conv_x"]))
+    bproj = jax.nn.silu(_depthwise_causal_conv(bproj, p["conv_b"]))
+    cproj = jax.nn.silu(_depthwise_causal_conv(cproj, p["conv_c"]))
+
+    xh = xin.reshape(b, s, n_heads, h_dim)
+    bm = bproj.reshape(b, s, n_groups, n_state)
+    cm = cproj.reshape(b, s, n_groups, n_state)
+    heads_per_group = n_heads // n_groups
+    bm = jnp.repeat(bm, heads_per_group, axis=2)  # (b, s, heads, n)
+    cm = jnp.repeat(cm, heads_per_group, axis=2)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (heads,)
+    dta = dt.astype(jnp.float32) * a[None, None, :]  # (b, s, heads) log-decay
+    xdt = xh.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    if pad:
+        live = (jnp.arange(s) < s_orig)[None, :, None]
+        dta = jnp.where(live, dta, 0.0)
+        xdt = jnp.where(live[..., None], xdt, 0.0)
+
+    # ---- chunked SSD ------------------------------------------------------
+    def to_chunks(t):  # (b, s, ...) -> (b, nc, chunk, ...)
+        return t.reshape(b, n_chunks, chunk, *t.shape[2:])
+
+    xc = to_chunks(xdt)  # (b, nc, L, heads, P)
+    bc = to_chunks(bm.astype(jnp.float32))
+    cc = to_chunks(cm.astype(jnp.float32))
+    ac = to_chunks(dta)  # (b, nc, L, heads)
+    a_cum = jnp.cumsum(ac, axis=2)  # within-chunk cumulative log decay
+
+    # diag block: y[i] = sum_{j<=i} exp(A[i]-A[j]) (c_i.b_j) x_j
+    decay = jnp.exp(a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :])  # (b,nc,L,L,h)
+    ii = np.arange(chunk)
+    # multiplicative 2-D causal mask (tiny, hoist-friendly).
+    mask_f = jnp.asarray((ii[:, None] >= ii[None, :]).astype(np.float32))
+    cb = jnp.einsum("bnihs,bnjhs->bnijh", cc, bc)  # (b,nc,L,L,h)
+    cb = cb * decay * mask_f[None, None, :, :, None]
+    y_diag = jnp.einsum("bnijh,bnjhp->bnihp", cb, xc)
+
+    # chunk states: S_c = sum_j exp(A[last]-A[j]) b_j x_j^T  (b,nc,h,n,P)
+    sdec = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b,nc,L,h)
+    s_chunk = jnp.einsum("bnlhs,bnlhp->bnhsp", bc * sdec[..., None], xc)
+
+    # inter-chunk recurrence via associative scan over chunks:
+    # h_c_out = prod_decay_c * h_c_in + S_c ; elements (decay, S).
+    # The nc axis is seq-sharded, so every scan step is a cross-device
+    # transfer of the (b, h, N, P) state — the dominant collective of SSM
+    # training (§Perf cell A). States are carried in bf16 (A2): halves scan
+    # traffic; the combine still accumulates through f32-decayed products.
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (b, nc, h)
+
+    def combine(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        s1f = unpack_bf16(s1).astype(jnp.float32)
+        s2f = unpack_bf16(s2).astype(jnp.float32)
+        s = s1f * d2[..., None, None] + s2f
+        return d1 * d2, pack_bf16(s.astype(jnp.bfloat16))
+
+    dec_scan, s_scan = jax.lax.associative_scan(
+        combine, (chunk_decay, pack_bf16(s_chunk.astype(jnp.bfloat16))), axis=1
+    )
+    s_scan = unpack_bf16(s_scan).astype(jnp.float32)
+    # state *entering* chunk c is the scan result of chunk c-1 (exclusive),
+    # optionally seeded by an incoming state.
+    h0 = (
+        state.h.astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, n_heads, h_dim, n_state), dtype=jnp.float32)
+    )
+    # scan gives inclusive prefixes; shift right by one chunk.
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_scan[:, :1]), s_scan[:, :-1]], axis=1
+    )  # (b, nc, h, n, P)
+    dec_prev = jnp.concatenate(
+        [jnp.ones_like(dec_scan[:, :1]), dec_scan[:, :-1]], axis=1
+    )
+    # fold the seed state through the prefix decays.
+    h0_t = jnp.swapaxes(h0, -1, -2)  # (b, h, n, P)
+    s_in = s_prev + dec_prev[..., None, None] * h0_t[:, None]
+    # A3: name the scan outputs so the remat policy can SAVE them — the
+    # recompute pass in backward then skips re-running the cross-device
+    # scan entirely (16.8 MB/layer/device stash buys one of four scan-comm
+    # passes; see EXPERIMENTS.md §Perf cell A).
+    s_in = jax.ad_checkpoint.checkpoint_name(s_in, "ssd_scan_state")
+
+    # inter-chunk contribution: y_inter[i] = exp(A[i]) * c_i . h_in
+    in_decay = jnp.exp(a_cum)  # (b, nc, L, h)
+    y_inter = jnp.einsum("bnlhs,bnhsp->bnlhp", cc * in_decay[..., None], s_in)
+
+    y = (y_diag + y_inter).reshape(b, s, n_heads, h_dim)
+    y = y + xdt.reshape(b, s, n_heads, h_dim) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, din).astype(x.dtype)
+    if pad:
+        y = y[:, :s_orig]
+        z = z[:, :s_orig]
+        x = x[:, :s_orig]
+
+    # gated RMSNorm then out projection (Mamba-2 block tail).
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["wo"]
+
+    final_state = None
+    if return_state or state is not None:
+        # full-sequence final state: inclusive scan at last chunk + seed.
+        h_last = s_scan[:, -1] + dec_scan[:, -1][..., None, None] * h0_t
+        km1 = cfg.ssm_conv - 1
+        final_state = SsmState(
+            conv_x=pack_bf16((x @ p["wx"])[:, -km1:, :].astype(jnp.bfloat16)),
+            conv_b=pack_bf16((x @ p["wb"])[:, -km1:, :].astype(jnp.bfloat16)),
+            conv_c=pack_bf16((x @ p["wc"])[:, -km1:, :].astype(jnp.bfloat16)),
+            h=jnp.swapaxes(h_last, -1, -2).astype(jnp.float32),
+        )
+    return out, final_state
+
+
+def ssd_decode_step(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (b, 1, d)
+    state: SsmState,
+) -> Tuple[jax.Array, SsmState]:
+    """Single-token recurrent step: h' = exp(dt*A) h + dt * B x ; y = C.h."""
+    b = x.shape[0]
+    h_dim, n_heads = cfg.ssm_headdim, cfg.ssm_nheads
+    n_state, n_groups = cfg.ssm_state, cfg.ssm_ngroups
+    din = cfg.d_inner
+
+    xt = x[:, 0, :]
+    z = xt @ p["wz"]
+    xin = xt @ p["wx"]
+    bproj = xt @ p["wb"]
+    cproj = xt @ p["wc"]
+    dt = jax.nn.softplus(xt @ p["wdt"] + p["dt_bias"])  # (b, heads)
+
+    def conv_step(stream, prev, w):
+        prev = unpack_bf16(prev).astype(stream.dtype)
+        window = jnp.concatenate([prev, stream[:, None, :]], axis=1)  # (b,k,c)
+        out = jax.nn.silu(jnp.einsum("bkc,ck->bc", window, w))
+        return out, pack_bf16(window[:, 1:, :].astype(jnp.bfloat16))
+
+    xin, new_cx = conv_step(xin, state.conv_x, p["conv_x"])
+    bm_, new_cb = conv_step(bproj, state.conv_b, p["conv_b"])
+    cm_, new_cc = conv_step(cproj, state.conv_c, p["conv_c"])
+    xin = xin.reshape(b, n_heads, h_dim)
+    bm = bm_.reshape(b, n_groups, n_state)
+    cm = cm_.reshape(b, n_groups, n_state)
+    hpg = n_heads // n_groups
+    bm = jnp.repeat(bm, hpg, axis=1)  # (b, heads, n)
+    cm = jnp.repeat(cm, hpg, axis=1)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32) * a[None, :])  # (b, heads)
+    xdt = xin.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]  # (b,h,P)
+    h_new = state.h * decay[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xdt, bm.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, cm.astype(jnp.float32))
+    y = y + xdt * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, din).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = (y @ p["wo"])[:, None, :]
+    return out, SsmState(conv_x=new_cx, conv_b=new_cb, conv_c=new_cc, h=h_new)

@@ -1,0 +1,124 @@
+"""Logical-axis sharding rules -> PartitionSpecs.
+
+Every parameter and activation is annotated with *logical* dimension names;
+a rules table maps logical names to mesh axes. Meshes that lack an axis
+(single-pod has no "pod"; smoke tests run on 1 device) simply drop it, so the
+same model code runs on any mesh shape — the basis for elastic re-sharding.
+
+Baseline layout (hillclimb levers are per-config, see ModelConfig):
+  batch   -> ("pod", "data")   activation/data parallel
+  seq     -> "model"           sequence/context parallel activations
+  tp      -> "model"           tensor-parallel flat weight dims
+  vocab   -> "model"           vocab-parallel embedding + logits
+  experts -> "model"           expert parallel (MoE)
+  fsdp    -> ("pod", "data")   ZeRO-style weight/optimizer sharding (MoE
+                               expert weights; optimizer master/moments)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Tuple[Tuple[str, Axes], ...] = (
+        ("batch", ("pod", "data")),
+        ("seq", "model"),
+        ("kvseq", "model"),
+        ("vocab", "model"),
+        ("tp", "model"),
+        ("tp_in", "model"),
+        ("heads", "model"),
+        ("experts", "model"),
+        ("fsdp", ("pod", "data")),
+        ("expert_fsdp", ("pod", "data")),
+        ("layers", None),
+        ("none", None),
+    )
+
+    def table(self) -> Dict[str, Axes]:
+        return dict(self.rules)
+
+    def replace(self, **kv) -> "ShardingRules":
+        tab = self.table()
+        tab.update(kv)
+        return ShardingRules(rules=tuple(tab.items()))
+
+
+DEFAULT_RULES = ShardingRules()
+
+# Train: dense weights ZeRO-3-sharded over the data axes (all-gathered per
+# layer inside the scan); serve: weights TP-only resident (decode must not
+# pay per-layer weight gathers). MoE expert weights stay fsdp-sharded in both
+# (they do not fit otherwise); the per-layer expert gather is the measured
+# serving bottleneck for grok — see EXPERIMENTS.md.
+RULES_TRAIN = DEFAULT_RULES
+RULES_SERVE = DEFAULT_RULES.replace(fsdp=None)
+
+
+def _resolve_axes(axes: Axes, mesh: Mesh) -> Axes:
+    """Drop mesh axes that do not exist on this mesh (elastic meshes)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def spec_for(logical: Sequence[str], rules: ShardingRules, mesh: Mesh,
+             shape: Optional[Sequence[int]] = None) -> P:
+    """PartitionSpec for a tensor with the given logical dim names.
+
+    If ``shape`` is provided, any dim whose size does not divide evenly by
+    the resolved mesh-axis size falls back to replication (guardrail for
+    reduced/smoke configs)."""
+    tab = rules.table()
+    out = []
+    for i, name in enumerate(logical):
+        axes = _resolve_axes(tab.get(name, None), mesh)
+        if axes is not None and shape is not None:
+            size = 1
+            for a in (axes,) if isinstance(axes, str) else axes:
+                size *= mesh.shape[a]
+            if shape[i] % size != 0:
+                axes = None
+        out.append(axes)
+    return P(*out)
+
+
+def named_sharding(logical: Sequence[str], rules: ShardingRules, mesh: Mesh,
+                   shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical, rules, mesh, shape))
+
+
+def constrain(x: jax.Array, logical: Sequence[str], rules: ShardingRules,
+              mesh: Mesh) -> jax.Array:
+    """with_sharding_constraint against the logical layout (no-op on 1 device)."""
+    import numpy as np
+
+    if np.prod(mesh.devices.shape) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(logical, rules, mesh, x.shape)
+    )
+
+
+def axis_size(rules_name: str, rules: ShardingRules, mesh: Mesh) -> int:
+    axes = _resolve_axes(rules.table().get(rules_name), mesh)
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out

@@ -1,0 +1,177 @@
+"""Decoder blocks for every assigned family, with sharding annotations.
+
+Block functions are mode-polymorphic:
+  mode="train"   full-seq, no cache
+  mode="prefill" full-seq, returns the layer's KV/SSM cache
+  mode="decode"  single token against a pre-allocated cache
+
+Baseline partitioning (see DESIGN.md §6):
+  * attention families: activations (batch, seq->model, d) between blocks
+    (sequence parallel); attention itself is context-parallel ("cp": q
+    seq-sharded, KV replicated — uniform across head counts) or
+    head-parallel ("hp") where head counts divide the axis;
+  * SSM/hybrid: activations (batch, none, d); inner d_inner/heads dims are
+    tensor-parallel (the causal conv forbids cheap seq sharding).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_lib
+from repro.models.attention import decode_attention, gqa_attention
+from repro.models.layers import apply_rope, pack_bf16, rmsnorm, swiglu, unpack_bf16
+from repro.models.mamba2 import SsmState, ssd_decode_step, ssd_mixer
+from repro.models.sharding import ShardingRules, constrain
+
+
+def residual_logical(cfg: ModelConfig) -> Tuple[str, str, str]:
+    # seq-sharded residual stream everywhere (sequence parallelism): the SSM
+    # depthwise conv lowers to a GSPMD halo exchange (collective-permute of
+    # k-1 positions) and the SSD chunk reshape keeps whole chunks per shard
+    # as long as (seq / model_axis) % ssm_chunk == 0 — true for all cells.
+    return ("batch", "seq", "none")
+
+
+# ---------------------------------------------------------------------------
+# Attention sublayer (dense / moe / audio / vlm / hybrid-shared)
+# ---------------------------------------------------------------------------
+
+
+def attention_sublayer(
+    cfg: ModelConfig,
+    mesh,
+    rules: ShardingRules,
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    positions: jax.Array,
+    mode: str,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    pos: Optional[jax.Array] = None,
+):
+    b, s, _ = x.shape
+    h_, kv = cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, h_, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and pos is not None
+        # cache is stored as u16 bit patterns of bf16 (layers.pack_bf16)
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], pack_bf16(k.astype(jnp.bfloat16)), (0, pos, 0, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], pack_bf16(v.astype(jnp.bfloat16)), (0, pos, 0, 0)
+        )
+        kc = constrain(kc, ("batch", "kvseq", "none", "none"), rules, mesh)
+        vc = constrain(vc, ("batch", "kvseq", "none", "none"), rules, mesh)
+        attn = decode_attention(q, unpack_bf16(kc), unpack_bf16(vc), pos)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        if cfg.attn_partitioning == "cp":
+            q = constrain(q, ("batch", "seq", "none", "none"), rules, mesh)
+            k = constrain(k, ("batch", "none", "none", "none"), rules, mesh)
+            v = constrain(v, ("batch", "none", "none", "none"), rules, mesh)
+        else:  # head-parallel
+            q = constrain(q, ("batch", "none", "heads", "none"), rules, mesh)
+            k = constrain(k, ("batch", "none", "heads", "none"), rules, mesh)
+            v = constrain(v, ("batch", "none", "heads", "none"), rules, mesh)
+        attn = gqa_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        if mode == "prefill":
+            new_cache = {"k": pack_bf16(k.astype(jnp.bfloat16)),
+                         "v": pack_bf16(v.astype(jnp.bfloat16))}
+    out = attn.reshape(b, s, h_ * hd) @ p["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def dense_block(cfg, mesh, rules, p, x, positions, mode, cache=None, pos=None):
+    res = residual_logical(cfg)
+    attn_out, new_cache = attention_sublayer(
+        cfg, mesh, rules, p, x, positions, mode, cache, pos
+    )
+    x = constrain(x + attn_out, res, rules, mesh)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        mlp_out, aux = moe_lib.moe_block(
+            cfg, mesh, rules, h, p["router"], p["moe_wi"], p["moe_wg"], p["moe_wo"]
+        )
+    else:
+        mlp_out = swiglu(h, p["wi"], p["wg"], p["wo_mlp"])
+        aux = jnp.zeros((), jnp.float32)
+    x = constrain(x + mlp_out, res, rules, mesh)
+    return x, new_cache, aux
+
+
+def ssm_block(cfg, mesh, rules, p, x, mode, state: Optional[SsmState] = None):
+    res = residual_logical(cfg)
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    if mode == "decode":
+        y, new_state = ssd_decode_step(cfg, p, h, state)
+    else:
+        y, new_state = ssd_mixer(cfg, p, h, state=None, return_state=(mode == "prefill"))
+    x = constrain(x + y, res, rules, mesh)
+    return x, new_state
+
+
+def hybrid_superblock(
+    cfg: ModelConfig,
+    mesh,
+    rules,
+    p_sb: Dict[str, jax.Array],  # mamba params, leading dim = hybrid_period
+    shared: Dict[str, jax.Array],  # shared attention+MLP block params
+    x: jax.Array,
+    positions,
+    mode: str,
+    ssm_states=None,  # SsmState with leading period dim (decode) or None
+    attn_cache=None,
+    pos=None,
+):
+    """``hybrid_period`` mamba layers then one *shared* attention block."""
+    new_states = []
+    new_attn_cache = None
+    for j in range(cfg.hybrid_period):
+        pj = jax.tree_util.tree_map(lambda a: a[j], p_sb)
+        st = (
+            jax.tree_util.tree_map(lambda a: a[j], ssm_states)
+            if ssm_states is not None
+            else None
+        )
+        x, st_new = ssm_block(cfg, mesh, rules, pj, x, mode, st)
+        if st_new is not None:
+            new_states.append(st_new)
+    attn_out, new_attn_cache = attention_sublayer(
+        cfg, mesh, rules, shared, x, positions, mode, attn_cache, pos
+    )
+    res = residual_logical(cfg)
+    x = constrain(x + attn_out, res, rules, mesh)
+    h = rmsnorm(x, shared["ln2"], cfg.norm_eps)
+    x = constrain(
+        x + swiglu(h, shared["wi"], shared["wg"], shared["wo_mlp"]), res, rules, mesh
+    )
+    stacked_states = None
+    if new_states:
+        stacked_states = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *new_states
+        )
+    return x, stacked_states, new_attn_cache

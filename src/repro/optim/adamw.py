@@ -1,0 +1,144 @@
+"""Mixed-precision AdamW with ZeRO-sharded optimizer state.
+
+Compute params are bf16 (sharded per model layout); the f32 master copy and
+both moments are additionally sharded over the ``fsdp`` axes (ZeRO-1): the
+optimizer update is elementwise, so arbitrary sharding is free, and GSPMD
+inserts the reduce-scatter (grads -> master sharding) and all-gather
+(master -> compute params) around the update automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.sharding import ShardingRules, _resolve_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    master: Any  # f32 master params (ZeRO-sharded)
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(np.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init(params) -> OptState:
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32), t
+    )
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda a: jnp.zeros(a.shape, jnp.float32), t
+    )
+    return OptState(
+        master=f32(params), mu=zeros(params), nu=zeros(params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def apply(
+    cfg: AdamWConfig, grads, opt: OptState, compute_dtype=jnp.bfloat16
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW update. Returns (new_compute_params, new_opt, metrics)."""
+    count = opt.count + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        p_new = p - lr * (step + wd * p)
+        return m, v, p_new
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_m = jax.tree_util.tree_leaves(opt.mu)
+    flat_v = jax.tree_util.tree_leaves(opt.nu)
+    flat_p = jax.tree_util.tree_leaves(opt.master)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    mu = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    nu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    master = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    params = jax.tree_util.tree_map(
+        lambda a, ref: a.astype(ref.dtype),
+        master,
+        jax.tree_util.tree_unflatten(tdef, flat_g),
+    )
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return params, OptState(master, mu, nu, count), metrics
+
+
+def zero_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+              rules: ShardingRules) -> P:
+    """Add fsdp-axis sharding to the first unsharded, divisible dim (ZeRO)."""
+    fsdp = _resolve_axes(rules.table().get("fsdp"), mesh)
+    if fsdp is None:
+        return spec
+    fsdp_t = (fsdp,) if isinstance(fsdp, str) else tuple(fsdp)
+    size = int(np.prod([mesh.shape[a] for a in fsdp_t]))
+    used = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in (entry,) if isinstance(entry, str) else entry:
+            used.add(a)
+    if any(a in used for a in fsdp_t):
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (entry, dim) in enumerate(zip(entries, shape)):
+        if entry is None and dim % size == 0 and dim >= size:
+            entries[i] = fsdp if isinstance(fsdp, str) else tuple(fsdp_t)
+            return P(*entries)
+    return spec
+
+
+def opt_pspecs(param_specs, param_shapes, mesh: Mesh, rules: ShardingRules):
+    """PartitionSpecs for OptState given the param specs/shapes trees."""
+    z = jax.tree_util.tree_map(
+        lambda s, sh: zero_spec(s, sh.shape, mesh, rules), param_specs, param_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return OptState(master=z, mu=z, nu=z, count=P())

@@ -1,0 +1,100 @@
+"""Cross-pod gradient compression via the paper's QRP (module 3).
+
+PowerSGD-style harness with the paper's QR-with-column-pivoting as the
+factorization core: before the *slow* (DCN / "pod"-axis) all-reduce, each
+gradient matrix G (m x n) is compressed to rank r:
+
+    Q = QRP_gram(G, r)          (paper module 3, Gram/pivoted-Cholesky form
+                                 — one MXU matmul + r-step K x K loop)
+    P = G^T Q                   (n x r)
+    all_reduce(Q, P) over the slow axis instead of all_reduce(G)
+    G_hat = Q P^T
+    error feedback: e <- G - G_hat  (added to next step's G)
+
+Bytes across the slow axis drop from m*n to r*(m+n) — e.g. a 4096x11008
+grad at r=64 is 34x smaller. The fast (ICI) axes still all-reduce exactly;
+compression applies only where the paper's QRP cost model wins (the
+bandwidth-starved pod axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qrp import qrp_gram
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    rank: int = 64
+    min_elements: int = 1 << 16  # only compress matrices bigger than this
+    slow_axis: str = "pod"
+
+
+def compress_matrix(g: jax.Array, rank: int) -> Tuple[jax.Array, jax.Array]:
+    """G (m, n) -> (Q (m, r), P (n, r)) with G_hat = Q @ P^T."""
+    m, n = g.shape
+    r = min(rank, m, n)
+    g32 = g.astype(jnp.float32)
+    q, _ = qrp_gram(g32, r)  # paper module 3 (Gram variant)
+    p = g32.T @ q
+    return q, p
+
+
+def decompress_matrix(q: jax.Array, p: jax.Array) -> jax.Array:
+    return q @ p.T
+
+
+def _compressible(leaf) -> bool:
+    return leaf.ndim >= 2
+
+
+def _as_matrix(leaf) -> jax.Array:
+    # collapse leading dims: (L, d, f) -> (L*d, f)
+    return leaf.reshape(-1, leaf.shape[-1])
+
+
+def compress_grads_for_slow_axis(
+    grads: Any,
+    cfg: CompressionConfig,
+    error: Optional[Any] = None,
+    axis_present: bool = True,
+) -> Tuple[Any, Any]:
+    """Compress + psum-over-slow-axis + decompress each large grad matrix,
+    with error feedback. Must run inside shard_map/pjit where ``slow_axis``
+    is a named axis (``axis_present=False`` degrades to identity for
+    single-pod meshes).
+
+    Returns (reduced_grads, new_error).
+    """
+
+    def one(g, e):
+        g = g + (e if e is not None else 0.0)
+        if not _compressible(g) or g.size < cfg.min_elements:
+            out = jax.lax.pmean(g, cfg.slow_axis) if axis_present else g
+            return out, jnp.zeros_like(g)
+        shape = g.shape
+        gm = _as_matrix(g).astype(jnp.float32)
+        q, p = compress_matrix(gm, cfg.rank)
+        if axis_present:
+            q = jax.lax.pmean(q, cfg.slow_axis)
+            p = jax.lax.pmean(p, cfg.slow_axis)
+        ghat = decompress_matrix(q, p)
+        err = (gm - ghat).reshape(shape).astype(g.dtype)
+        return ghat.reshape(shape).astype(g.dtype), err
+
+    if error is None:
+        error = jax.tree_util.tree_map(lambda g: jnp.zeros_like(g), grads)
+    pairs = jax.tree_util.tree_map(one, grads, error)
+    reduced = jax.tree_util.tree_map(lambda pr: pr[0], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(lambda pr: pr[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return reduced, new_err
+
+
+def compression_ratio_matrix(m: int, n: int, r: int) -> float:
+    return (m * n) / (r * (m + n))

@@ -1,0 +1,97 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, retry policy,
+failure injection, elastic re-mesh decisions.
+
+On a real pod each host runs a Heartbeater; the coordinator aggregates and
+the Trainer consults ``should_checkpoint`` / ``straggler_report`` per step.
+In this container the same code paths run single-host and are exercised by
+failure-injection tests (tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class FtConfig:
+    checkpoint_every: int = 50
+    straggler_window: int = 20  # steps of timing history
+    straggler_factor: float = 2.0  # step > factor * median -> straggler
+    max_retries: int = 3
+    retry_backoff_s: float = 0.05
+    heartbeat_timeout_s: float = 60.0
+
+
+class StragglerDetector:
+    """Watermark detector over per-step host timings.
+
+    At pod scale every host reports its step wall time; a host consistently
+    above ``factor * median`` is flagged (ICI neighbors then route around it
+    / the coordinator schedules its eviction). Single-host: flags slow
+    *steps* (e.g. background compaction) so the trainer can log/skip-profile.
+    """
+
+    def __init__(self, cfg: FtConfig):
+        self.cfg = cfg
+        self.history: Deque[float] = deque(maxlen=cfg.straggler_window)
+        self.flags: List[int] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        h = sorted(self.history)
+        median = h[len(h) // 2] if h else dt
+        is_straggler = len(self.history) >= 5 and dt > self.cfg.straggler_factor * median
+        self.history.append(dt)
+        if is_straggler:
+            self.flags.append(step)
+        return is_straggler
+
+
+class Heartbeater:
+    """Host liveness registry (coordinator side)."""
+
+    def __init__(self, cfg: FtConfig, now: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.now = now
+        self.last_seen: Dict[str, float] = {}
+
+    def beat(self, host: str):
+        self.last_seen[host] = self.now()
+
+    def dead_hosts(self) -> List[str]:
+        t = self.now()
+        return [
+            h for h, last in self.last_seen.items()
+            if t - last > self.cfg.heartbeat_timeout_s
+        ]
+
+
+class FailureInjector:
+    """Deterministic failure injection for tests: raise at given steps."""
+
+    def __init__(self, fail_at: Optional[List[int]] = None,
+                 exc: type = RuntimeError):
+        self.fail_at = set(fail_at or [])
+        self.exc = exc
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise self.exc(f"injected failure at step {step}")
+
+
+def run_with_retries(fn: Callable, cfg: FtConfig, on_retry: Optional[Callable] = None):
+    """Execute fn() with bounded retries (transient-failure policy: XLA OOM
+    and network faults are fatal; injected/transient RuntimeErrors retry)."""
+    last = None
+    for attempt in range(cfg.max_retries + 1):
+        try:
+            return fn()
+        except RuntimeError as e:  # transient class
+            last = e
+            if on_retry:
+                on_retry(attempt, e)
+            time.sleep(cfg.retry_backoff_s * (2 ** attempt))
+    raise last

@@ -1,0 +1,88 @@
+"""Batched serving engine: prefill + decode with a pre-allocated KV budget.
+
+Continuous-batching-lite: requests are grouped into fixed-shape batches
+(prefill once, decode step-by-step); finished sequences are masked, new
+requests splice into freed slots at batch boundaries. Shapes stay static so
+every step hits the same compiled executable — the serving-side contract for
+the decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.models.sharding import DEFAULT_RULES, ShardingRules
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq_len: int = 512
+    batch_size: int = 4
+    temperature: float = 0.0  # greedy
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        mesh: jax.sharding.Mesh,
+        params,
+        scfg: ServeConfig = ServeConfig(),
+        rules: ShardingRules = DEFAULT_RULES,
+    ):
+        self.cfg, self.mesh, self.scfg = cfg, mesh, scfg
+        self.params = params
+        self.prefill = jax.jit(model_lib.make_prefill_step(cfg, mesh, rules))
+        self.decode = jax.jit(model_lib.make_serve_step(cfg, mesh, rules))
+
+    def _pad_cache(self, cache, from_len: int):
+        """Grow the prefill cache's kvseq dim to the serving budget."""
+        target = self.scfg.max_seq_len
+
+        def pad(a):
+            # attention cache leaves: (..., S, kv, hd); ssm states untouched.
+            if a.ndim >= 3 and a.shape[-3] == from_len and a.dtype == jnp.uint16:
+                pad_width = [(0, 0)] * a.ndim
+                pad_width[-3] = (0, target - from_len)
+                return jnp.pad(a, pad_width)
+            return a
+
+        return jax.tree_util.tree_map(pad, cache)
+
+    def generate(
+        self, prompts: np.ndarray, max_new_tokens: int = 32,
+        eos_id: Optional[int] = None,
+    ) -> np.ndarray:
+        """prompts: (B, P) int32. Returns (B, P + max_new_tokens)."""
+        b, p = prompts.shape
+        assert b == self.scfg.batch_size, (b, self.scfg.batch_size)
+        assert p + max_new_tokens <= self.scfg.max_seq_len
+        logits, cache = self.prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        cache = self._pad_cache(cache, p)
+        out = [jnp.asarray(prompts)]
+        done = jnp.zeros((b,), dtype=bool)
+        token = self._sample(logits)
+        for i in range(max_new_tokens):
+            out.append(token[:, None])
+            if eos_id is not None:
+                done = done | (token == eos_id)
+            logits, cache = self.decode(
+                self.params, cache, {"token": token[:, None], "pos": jnp.int32(p + i)}
+            )
+            nxt = self._sample(logits)
+            token = jnp.where(done, token, nxt) if eos_id is not None else nxt
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        logits = logits[..., : self.cfg.vocab_size]
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits / self.scfg.temperature
+        key = jax.random.PRNGKey(int(np.random.default_rng().integers(1 << 31)))
+        return jax.random.categorical(key, scaled).astype(jnp.int32)

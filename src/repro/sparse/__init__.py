@@ -1,0 +1,11 @@
+from repro.sparse.generators import (
+    random_sparse_tensor,
+    low_rank_sparse_tensor,
+)
+from repro.sparse.datasets import (
+    amazon_like,
+    nell2_like,
+    matmul_tensor,
+    angiogram_like,
+    PAPER_DATASETS,
+)

@@ -1,0 +1,70 @@
+"""Train-step factory: loss -> grads -> AdamW, fully jittable."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.models.sharding import ShardingRules
+from repro.optim import adamw
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    rules: ShardingRules,
+    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+):
+    loss_fn = model_lib.make_loss_fn(cfg, mesh, rules)
+    import numpy as np
+
+    multi_device = int(np.prod(mesh.devices.shape)) > 1
+    if multi_device:
+        pshapes = model_lib.param_shapes(cfg)
+        pspecs = model_lib.param_pspecs(cfg, rules, mesh)
+        zspecs = adamw.opt_pspecs(pspecs, pshapes, mesh, rules).master
+        grad_shardings = jax.tree_util.tree_map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), zspecs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+        )
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if multi_device:
+            # reduce-scatter the grads onto the ZeRO (master) layout *before*
+            # the f32 upcast in the update — otherwise XLA materializes the
+            # full unsharded gradient in f32 (observed: +9 GiB/dev on 76B).
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        params, opt_state, metrics = adamw.apply(opt_cfg, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_state_specs(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules):
+    """(shapes, shardings) for (params, opt_state) — schema-derived, no
+    allocation (dry-run) or device_put targets (real init)."""
+    pshapes = model_lib.param_shapes(cfg)
+    pspecs = model_lib.param_pspecs(cfg, rules, mesh)
+    pshard = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+    ospecs = adamw.opt_pspecs(pspecs, pshapes, mesh, rules)
+    f32like = lambda t: jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), t
+    )
+    oshapes = adamw.OptState(
+        master=f32like(pshapes), mu=f32like(pshapes), nu=f32like(pshapes),
+        count=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    oshard = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), ospecs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+    return (pshapes, oshapes), (pshard, oshard)

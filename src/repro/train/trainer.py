@@ -1,0 +1,120 @@
+"""Fault-tolerant training loop.
+
+Wires together: model steps, AdamW, the data pipeline, the checkpoint
+manager (save/auto-resume/elastic-reshard), straggler detection, bounded
+retries and failure injection. Runs identically on 1 CPU device and on the
+production mesh (everything mesh-dependent goes through the sharding rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import model as model_lib
+from repro.models.sharding import DEFAULT_RULES, ShardingRules
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import (
+    FailureInjector,
+    FtConfig,
+    StragglerDetector,
+    run_with_retries,
+)
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    opt: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+    ft: FtConfig = dataclasses.field(default_factory=FtConfig)
+    data: DataConfig = dataclasses.field(default_factory=DataConfig)
+    checkpoint_dir: str = ""
+    resume: str = "auto"  # auto | never
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        shape: ShapeConfig,
+        mesh: jax.sharding.Mesh,
+        tcfg: TrainerConfig = TrainerConfig(),
+        rules: ShardingRules = DEFAULT_RULES,
+        injector: Optional[FailureInjector] = None,
+    ):
+        self.cfg, self.shape, self.mesh, self.tcfg = cfg, shape, mesh, tcfg
+        self.rules = rules
+        self.injector = injector
+        self.step_fn = jax.jit(make_train_step(cfg, mesh, rules, tcfg.opt))
+        self.ckpt = (
+            CheckpointManager(tcfg.checkpoint_dir) if tcfg.checkpoint_dir else None
+        )
+        self.detector = StragglerDetector(tcfg.ft)
+        self.history: List[Dict[str, float]] = []
+        self.start_step = 0
+
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        opt_state = adamw.init(params)
+        if self.ckpt and tcfg.resume == "auto" and self.ckpt.latest_step() is not None:
+            (params, opt_state), step, _ = self.ckpt.restore((params, opt_state))
+            self.start_step = step
+        self.params, self.opt_state = params, opt_state
+
+    def _device_batch(self, batch: Dict[str, np.ndarray]):
+        return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+
+    def run(self) -> List[Dict[str, float]]:
+        embeds = self.cfg.frontend != "none"
+        pipe = TokenPipeline(
+            self.cfg, self.shape, self.tcfg.data, start_step=self.start_step,
+            embeds=embeds,
+        )
+        try:
+            for step in range(self.start_step, self.tcfg.total_steps):
+                batch = next(pipe)
+
+                def do_step():
+                    if self.injector:
+                        self.injector.maybe_fail(step)
+                    t0 = time.monotonic()
+                    params, opt_state, metrics = self.step_fn(
+                        self.params, self.opt_state, self._device_batch(batch)
+                    )
+                    metrics = {k: float(v) for k, v in metrics.items()}
+                    metrics["step_time_s"] = time.monotonic() - t0
+                    return params, opt_state, metrics
+
+                self.params, self.opt_state, metrics = run_with_retries(
+                    do_step, self.tcfg.ft,
+                    on_retry=lambda a, e: print(f"[retry {a}] step {step}: {e}"),
+                )
+                metrics["step"] = step
+                metrics["straggler"] = float(
+                    self.detector.observe(step, metrics["step_time_s"])
+                )
+                self.history.append(metrics)
+                if step % self.tcfg.log_every == 0:
+                    print(
+                        f"step {step:5d} loss {metrics['loss']:.4f} "
+                        f"gnorm {metrics['grad_norm']:.3f} "
+                        f"{metrics['step_time_s']*1e3:.0f}ms",
+                        flush=True,
+                    )
+                if (
+                    self.ckpt
+                    and (step + 1) % self.tcfg.ft.checkpoint_every == 0
+                ):
+                    self.ckpt.save(step + 1, (self.params, self.opt_state))
+            if self.ckpt:
+                self.ckpt.save(self.tcfg.total_steps, (self.params, self.opt_state))
+        finally:
+            pipe.close()
+        return self.history

@@ -1,0 +1,319 @@
+"""Post-SPMD HLO text analyzer for the roofline harness.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE regardless of its
+trip count, and gives no per-collective breakdown. This module parses the
+optimized HLO text (``compiled.as_text()``) into computations and:
+
+  * extracts ``known_trip_count`` for every while op and builds the
+    call-multiplier for each computation (layer scans multiply their body);
+  * counts matmul FLOPs per computation from ``dot`` ops (shapes +
+    dot_dimension_numbers are all in the text) — the precise per-device
+    FLOPs total  sum_comp dot_flops(comp) * multiplier(comp);
+  * sums collective bytes (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute) by *operand* size, per computation,
+    with the same multipliers;
+  * approximates HBM traffic as result+operand bytes of non-trivial ops
+    (post-fusion HLO: fusion boundaries ~ materialization boundaries).
+
+Conventions: everything is per-device (the partitioned module). dtype sizes
+from the shape strings (f32[...], bf16[...], s32[...], pred[...], ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_TRIVIAL = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "iota", "copy",
+}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: List[str]
+    dot_flops: float = 0.0
+    io_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    whiles: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    calls: List[str] = dataclasses.field(default_factory=list)
+    upcast_bytes: float = 0.0  # big f32 converts (weight-stack upcasts)
+    f32_results: List[tuple] = dataclasses.field(default_factory=list)
+    lowp_param_dims: set = dataclasses.field(default_factory=set)
+    coll_xpod: float = 0.0  # collective bytes crossing the pod boundary
+
+
+_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def split_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        # computation headers ("%name (args...) -> type {") may be indented
+        # by one space for nested (while-body) computations.
+        m = _HDR_RE.match(line)
+        if m and "=" not in line.split("(", 1)[0]:
+            cur = Computation(m.group(1), [])
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            cur.lines.append(line)
+    return comps
+
+
+def _crosses_boundary(line: str, boundary: int) -> bool:
+    """Does this collective's replica grouping cross device id ``boundary``
+    (the pod edge on the 2x16x16 mesh)? Handles explicit group lists and the
+    iota form [a,b,...]<=[N](T(perm))? — a group crosses iff it contains ids
+    on both sides."""
+    m = re.search(r"replica_groups=\{\{([^}]*(?:\},\{[^}]*)*)\}\}", line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in grp.split(",") if x.strip().isdigit()]
+            if ids and min(ids) < boundary <= max(ids):
+                return True
+        return False
+    m = re.search(r"replica_groups=\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?",
+                  line)
+    if m:
+        import numpy as _np
+
+        gshape = [int(x) for x in m.group(1).split(",")]
+        ishape = [int(x) for x in m.group(2).split(",")]
+        ids = _np.arange(int(_np.prod(ishape))).reshape(ishape)
+        if m.group(3):
+            perm = [int(x) for x in m.group(3).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(gshape[0], -1) if len(gshape) >= 1 else ids
+        for g in groups:
+            if g.min() < boundary <= g.max():
+                return True
+    return False
+
+
+def _dot_flops_from_line(line: str, defs: Dict[str, str]) -> float:
+    """2 * prod(result_dims) * prod(contracting dims of lhs)."""
+    m = _OP_RE.match(line)
+    if not m:
+        return 0.0
+    res_type = m.group(2)
+    sd = shape_dims(res_type)
+    if sd is None:
+        return 0.0
+    _, res_dims = sd
+    out = 1
+    for d in res_dims:
+        out *= d
+    # contracting dims: from lhs operand shape + lhs_contracting_dims
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    ops = re.search(r"\(([^)]*)\)", line[line.index("(") :])
+    contract = 1
+    if mc and ops:
+        operand_names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+        lhs = operand_names[0] if operand_names else None
+        lhs_type = defs.get(lhs, "")
+        sd_l = shape_dims(lhs_type)
+        if sd_l:
+            _, ldims = sd_l
+            for idx in mc.group(1).split(","):
+                if idx != "" and int(idx) < len(ldims):
+                    contract *= ldims[int(idx)]
+    return 2.0 * out * contract
+
+
+def analyze_computation(comp: Computation) -> None:
+    defs: Dict[str, str] = {}
+    # first pass: map op name -> result type (includes parameters)
+    for line in comp.lines:
+        m = _OP_RE.match(line)
+        if m:
+            defs[m.group(1)] = m.group(2)
+    for line in comp.lines:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, res_type, opcode = m.groups()
+        if opcode == "dot" or opcode == "convolution":
+            comp.dot_flops += _dot_flops_from_line(line, defs)
+        if opcode == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mt = re.search(r'known_trip_count.*?"n":"(\d+)"', line)
+            trip = int(mt.group(1)) if mt else 1
+            if mb:
+                comp.whiles.append((mb.group(1), trip))
+            mcnd = re.search(r"condition=%?([\w\.\-]+)", line)
+            if mcnd:
+                comp.calls.append(mcnd.group(1))
+        if opcode in ("fusion", "call", "custom-call"):
+            for mcall in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", line):
+                comp.calls.append(mcall.group(1))
+        if opcode in _COLLECTIVES:
+            # operand bytes (the data actually moved)
+            ops = re.search(r"\(([^)]*)\)", line[line.index("(") :])
+            nbytes = 0
+            if ops:
+                for oname in ops.group(1).split(","):
+                    oname = oname.strip().lstrip("%")
+                    if oname in defs:
+                        nbytes += shape_bytes(defs[oname])
+            if nbytes == 0:
+                nbytes = shape_bytes(res_type)
+            comp.coll_bytes[opcode] = comp.coll_bytes.get(opcode, 0.0) + nbytes
+            if _crosses_boundary(line, 256):
+                comp.coll_xpod += nbytes
+        # f32 upcast copies of whole bf16/u16 weight stacks: detected as any
+        # big entry-level f32 result whose dims exactly equal a low-precision
+        # parameter's dims (the convert may be wrapped in a kLoop fusion).
+        if res_type.startswith("f32") and opcode != "parameter":
+            sdr = shape_dims(res_type)
+            if sdr is not None and shape_bytes(res_type) > (8 << 20):
+                comp.f32_results.append(tuple(sdr[1]))
+        if opcode == "parameter" and (
+            res_type.startswith("bf16") or res_type.startswith("u16")
+        ):
+            sdp = shape_dims(res_type)
+            if sdp is not None:
+                comp.lowp_param_dims.add(tuple(sdp[1]))
+        if opcode not in _TRIVIAL and opcode not in ("while", "conditional"):
+            # HBM traffic approximation: bytes *written* per op (results of
+            # post-fusion ops ~ materialization boundaries). Reads are
+            # approximated as equal to writes by the consumer (reported as
+            # 2x in the roofline). Operand-side counting would double-count
+            # loop-carried tuples and dynamic-slice sources.
+            comp.io_bytes += shape_bytes(res_type)
+
+
+@dataclasses.dataclass
+class HloSummary:
+    dot_flops: float  # per device, trip-count multiplied
+    io_bytes: float  # per device, approximate HBM traffic
+    coll_bytes: Dict[str, float]  # per device, per collective kind
+    trip_counts: Dict[str, int]  # body computation -> trip count
+    coll_ops: int
+    entry_upcast_bytes: float = 0.0  # host-backend f32 weight upcasts (entry)
+    coll_xpod_bytes: float = 0.0  # collective bytes crossing the pod edge
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def analyze_hlo(text: str) -> HloSummary:
+    comps = split_computations(text)
+    for c in comps.values():
+        analyze_computation(c)
+
+    # multipliers: comp executed trip times if it's a while body (or called
+    # from one, transitively).
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    entry = None
+    for name, c in comps.items():
+        if name.startswith("main") or entry is None:
+            if name.startswith("main"):
+                entry = name
+    if entry is None:
+        entry = next(iter(comps))
+
+    import collections
+
+    mult[entry] = 1.0
+    # propagate through call edges (fusions/calls: same multiplier; while
+    # bodies: multiplier * trip).
+    queue = collections.deque([entry])
+    visited_edges = set()
+    while queue:
+        name = queue.popleft()
+        c = comps[name]
+        for callee in c.calls:
+            if callee in comps:
+                key = (name, callee)
+                if key not in visited_edges:
+                    visited_edges.add(key)
+                    mult[callee] = mult.get(callee, 0.0) + mult[name]
+                    queue.append(callee)
+        for body, trip in c.whiles:
+            if body in comps:
+                key = (name, body, "w")
+                if key not in visited_edges:
+                    visited_edges.add(key)
+                    mult[body] = mult.get(body, 0.0) + mult[name] * trip
+                    queue.append(body)
+
+    flops = 0.0
+    io = 0.0
+    coll: Dict[str, float] = {}
+    coll_ops = 0
+    xpod = 0.0
+    trip_counts = {}
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        flops += c.dot_flops * m
+        io += c.io_bytes * m
+        for k, v in c.coll_bytes.items():
+            coll[k] = coll.get(k, 0.0) + v * m
+            coll_ops += 1
+        xpod += c.coll_xpod * m
+        for body, trip in c.whiles:
+            trip_counts[body] = trip
+    # entry-computation upcasts only: f32 copies shaped exactly like bf16/u16
+    # weight-stack parameters, hoisted out of the layer loops — a pure
+    # host-backend artifact (TPU executes bf16 dots natively). In-loop
+    # converts are real work buffers and are NOT subtracted.
+    entry_upcasts = 0.0
+    for name, c in comps.items():
+        if not name.startswith("main"):
+            continue
+        for dims in c.f32_results:
+            if dims in c.lowp_param_dims:
+                n = 1
+                for d in dims:
+                    n *= d
+                entry_upcasts += n * 4
+    return HloSummary(flops, io, coll, trip_counts, coll_ops, entry_upcasts,
+                      xpod)

@@ -1,0 +1,58 @@
+"""Pytree utilities (no chex/optax available — hand rolled)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar elements in a pytree of arrays."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays (by declared dtype)."""
+    total = 0
+    for l in jax.tree_util.tree_leaves(tree):
+        if hasattr(l, "shape"):
+            total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    return total
+
+
+def tree_norm(tree):
+    """Global L2 norm across a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path_names(fn, tree):
+    """Like tree_map but fn receives (name, leaf) with 'a/b/c' style names."""
+    return jax.tree_util.tree_map_with_path(lambda p, l: fn(_path_str(p), l), tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda l: l * s, tree)

@@ -1,0 +1,87 @@
+"""COO format + unfold/fold invariants (unit + property)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coo import SparseCOO, fold_dense, unfold_dense
+
+
+def test_paper_table1_roundtrip():
+    # the exact 5x5x5x5 example of paper Table I (1-indexed -> 0-indexed)
+    idx = np.array([[0,0,0,0],[0,0,0,4],[0,0,2,4],[1,1,1,3]], dtype=np.int32)
+    vals = np.array([2, 7.5, 4, 5], dtype=np.float32)
+    coo = SparseCOO.from_parts(idx, vals, (5,5,5,5))
+    dense = np.asarray(coo.to_dense())
+    assert dense[0,0,0,0] == 2 and dense[0,0,0,4] == 7.5
+    assert dense[0,0,2,4] == 4 and dense[1,1,1,3] == 5
+    back = SparseCOO.from_dense(dense)
+    assert back.nnz == 4
+    np.testing.assert_allclose(np.asarray(back.to_dense()), dense)
+
+
+def test_norm_matches_dense():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((6, 7, 8)).astype(np.float32)
+    x[x < 0.5] = 0
+    coo = SparseCOO.from_dense(x)
+    np.testing.assert_allclose(float(coo.norm()), np.linalg.norm(x.ravel()), rtol=1e-6)
+
+
+def test_padding_does_not_change_norm_or_dense():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((4, 5)).astype(np.float32)
+    coo = SparseCOO.from_dense(x)
+    padded = coo.pad_to(coo.nnz + 13)
+    np.testing.assert_allclose(float(padded.norm()), float(coo.norm()), rtol=1e-6)
+    # padding rows carry value 0 at index (0, 0,...): dense unchanged
+    np.testing.assert_allclose(
+        np.asarray(padded.to_dense()), np.asarray(coo.to_dense())
+    )
+
+
+@given(
+    shape=st.tuples(*(st.integers(2, 6),) * 3),
+    mode=st.integers(0, 2),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=25, deadline=None)
+def test_unfold_fold_inverse(shape, mode, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+    u = unfold_dense(x, mode)
+    assert u.shape == (shape[mode], np.prod(shape) // shape[mode])
+    back = fold_dense(u, mode, shape)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), rtol=1e-6)
+
+
+@given(
+    shape=st.tuples(st.integers(2, 5), st.integers(2, 5), st.integers(2, 5)),
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=20, deadline=None)
+def test_unfold_matches_kolda_eq2(shape, seed):
+    """Eq. 2: X_(n)(i_n, j), j = 1 + sum (i_k - 1) * prod_{m<k} I_m."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32)
+    n = 0
+    u = np.asarray(unfold_dense(jnp.asarray(x), n))
+    for _ in range(10):
+        i = tuple(rng.integers(0, s) for s in shape)
+        rest = [k for k in range(3) if k != n]
+        j, stride = 0, 1
+        for k in rest:
+            j += i[k] * stride
+            stride *= shape[k]
+        assert u[i[n], j] == pytest.approx(x[i], rel=1e-6)
+
+
+def test_linearized_index_matches_unfold():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((4, 5, 6)).astype(np.float32)
+    coo = SparseCOO.from_dense(x)
+    for mode in range(3):
+        u = np.asarray(unfold_dense(jnp.asarray(x), mode))
+        cols = np.asarray(coo.linearized_index(mode))
+        rows = np.asarray(coo.indices[:, mode])
+        np.testing.assert_allclose(u[rows, cols], np.asarray(coo.values), rtol=1e-6)

@@ -1,0 +1,61 @@
+"""HLO analyzer: trip-count multipliers + dot flops vs analytic ground truth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.utils.hlo import analyze_hlo, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,8]{1,0}") == 128
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("(f32[2,2], s32[3])") == 28
+    assert shape_bytes("u16[5,5]") == 50
+
+
+def test_scan_flops_trip_multiplied():
+    n, L = 128, 8
+
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=L)
+        return out
+
+    compiled = jax.jit(f).lower(jax.ShapeDtypeStruct((n, n), jnp.float32)).compile()
+    s = analyze_hlo(compiled.as_text())
+    want = 2 * n**3 * L
+    assert s.dot_flops == pytest.approx(want, rel=0.01)
+
+
+def test_nested_scan_flops():
+    n, L1, L2 = 64, 3, 5
+
+    def f(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ c2, None
+            c, _ = jax.lax.scan(inner, c, None, length=L2)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=L1)
+        return out
+
+    compiled = jax.jit(f).lower(jax.ShapeDtypeStruct((n, n), jnp.float32)).compile()
+    s = analyze_hlo(compiled.as_text())
+    want = 2 * n**3 * L1 * L2
+    assert s.dot_flops == pytest.approx(want, rel=0.01)
+
+
+def test_unscanned_dot_counted_once():
+    n = 96
+
+    def f(a, b):
+        return a @ b
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+    ).compile()
+    s = analyze_hlo(compiled.as_text())
+    assert s.dot_flops == pytest.approx(2 * n**3, rel=0.01)

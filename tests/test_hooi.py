@@ -1,0 +1,102 @@
+"""HOOI drivers: Alg. 1 vs Alg. 2, QRP-vs-SVD accuracy (paper Table II)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.coo import SparseCOO
+from repro.core.hooi import hooi_dense, hooi_sparse
+from repro.core.reconstruct import (
+    compression_ratio, reconstruct_at, reconstruct_dense, relative_error_dense,
+)
+from repro.sparse.generators import low_rank_sparse_tensor, random_sparse_tensor
+
+
+def _lowrank_dense(shape, ranks, seed=0):
+    rng = np.random.default_rng(seed)
+    us = [np.linalg.qr(rng.standard_normal((s, r)))[0] for s, r in zip(shape, ranks)]
+    g = rng.standard_normal(ranks)
+    x = g
+    for t, u in enumerate(us):
+        x = np.moveaxis(np.tensordot(u, x, axes=(1, t)), 0, t)
+    return x.astype(np.float32)
+
+
+def test_dense_hooi_recovers_exact_rank():
+    x = jnp.asarray(_lowrank_dense((20, 18, 16), (4, 3, 2)))
+    for method in ("svd", "householder", "gram"):
+        res = hooi_dense(x, (4, 3, 2), n_iter=3, method=method)
+        assert float(res.rel_error) < 5e-3, method
+        # exact reconstruction check (not just the projection identity)
+        assert float(relative_error_dense(x, res.core, res.factors)) < 5e-3
+
+
+def test_sparse_hooi_matches_dense_hooi():
+    """Alg. 2 on a fully-stored COO == Alg. 1 on the dense tensor."""
+    x = _lowrank_dense((15, 12, 10), (3, 3, 2), seed=5)
+    coo = SparseCOO.from_dense(x)
+    d = hooi_dense(jnp.asarray(x), (3, 3, 2), n_iter=3, method="svd")
+    s = hooi_sparse(coo, (3, 3, 2), n_iter=3, method="svd")
+    np.testing.assert_allclose(
+        float(s.rel_error), float(d.rel_error), atol=1e-3
+    )
+
+
+def test_qrp_matches_svd():
+    """Paper Table II: QRP-HOOI reconstruction error == SVD-HOOI error."""
+    for size in (30, 50):
+        x = jnp.asarray(_lowrank_dense((size,) * 3, (8, 8, 8), seed=size))
+        noise = 1e-3 * np.random.default_rng(1).standard_normal(x.shape)
+        xn = x + jnp.asarray(noise.astype(np.float32))
+        errs = {}
+        for method in ("svd", "householder", "gram"):
+            errs[method] = float(
+                hooi_dense(xn, (8, 8, 8), n_iter=3, method=method).rel_error
+            )
+        # same accuracy scale (the paper's exact-agreement claim at the
+        # 1e-9 error floor is reproduced in float64 by benchmarks/table2)
+        assert errs["householder"] == pytest.approx(errs["svd"], rel=0.15)
+        assert errs["gram"] == pytest.approx(errs["svd"], rel=0.15)
+
+
+def test_kron_reuse_is_exact():
+    coo = random_sparse_tensor((20, 20, 20), 0.02, seed=4)
+    a = hooi_sparse(coo, (4, 4, 4), n_iter=2, method="gram")
+    b = hooi_sparse(coo, (4, 4, 4), n_iter=2, method="gram", use_kron_reuse=True)
+    np.testing.assert_allclose(float(a.rel_error), float(b.rel_error), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.core), np.asarray(b.core), atol=1e-3)
+
+
+def test_tucker_completion_recovers_sampled_tensor():
+    """Recoverable regime (paper use cases [27]/[15]): EM-style completion
+    on 20%-sampled exactly-low-rank data recovers the observed entries."""
+    from repro.core.hooi import tucker_complete_dense
+
+    density = 0.3  # 20% sits below this problem's practical EM threshold
+    coo, truth = low_rank_sparse_tensor((30, 30, 30), (3, 3, 3), density, seed=9)
+    res = tucker_complete_dense(coo, (3, 3, 3), n_rounds=20, n_iter=2)
+    xhat = reconstruct_at(res.core, res.factors, coo.indices)
+    rel = float(
+        jnp.linalg.norm(xhat - coo.values) / jnp.linalg.norm(coo.values)
+    )
+    assert rel < 0.05
+    # zero-filled single-shot HOOI is far worse — completion is doing work
+    res0 = hooi_sparse(coo, (3, 3, 3), n_iter=4, method="gram")
+    xhat0 = reconstruct_at(res0.core, res0.factors, coo.indices)
+    rel0 = float(jnp.linalg.norm(xhat0 - coo.values) / jnp.linalg.norm(coo.values))
+    assert rel < rel0
+
+
+def test_projection_identity_matches_dense_error():
+    x = _lowrank_dense((12, 11, 10), (3, 3, 3), seed=2)
+    xn = x + 0.05 * np.random.default_rng(0).standard_normal(x.shape).astype(np.float32)
+    res = hooi_dense(jnp.asarray(xn), (3, 3, 3), n_iter=3, method="svd")
+    direct = float(relative_error_dense(jnp.asarray(xn), res.core, res.factors))
+    assert float(res.rel_error) == pytest.approx(direct, rel=1e-2)
+
+
+def test_compression_ratio_paper_angiogram():
+    # paper: rank [30, 35] on 130x150 -> 18.57x (core-only convention)
+    assert compression_ratio((130, 150), (30, 35), include_factors=False) \
+        == pytest.approx(18.57, rel=0.01)
+    assert compression_ratio((130, 150), (30, 35)) == pytest.approx(1.91, rel=0.02)

@@ -1,0 +1,85 @@
+"""QRP (paper module 3): orthonormality, pivoting, SVD-subspace equivalence."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qrp import (
+    qrp_flops, qrp_gram, qrp_householder, svd_factor, svd_flops,
+)
+
+
+def _subspace_angle(a, b):
+    qa, _ = np.linalg.qr(np.asarray(a))
+    qb, _ = np.linalg.qr(np.asarray(b))
+    s = np.linalg.svd(qa.T @ qb, compute_uv=False)
+    return float(np.arccos(np.clip(s.min(), -1, 1)))
+
+
+@pytest.mark.parametrize("method", ["householder", "gram"])
+@pytest.mark.parametrize("m,n,r", [(40, 12, 4), (100, 9, 9), (64, 30, 8)])
+def test_orthonormal_columns(method, m, n, r):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+    q = qrp_householder(a, r)[0] if method == "householder" else qrp_gram(a, r)[0]
+    np.testing.assert_allclose(
+        np.asarray(q.T @ q), np.eye(r), atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("method", ["householder", "gram"])
+def test_exact_rank_recovery(method):
+    """On an exactly rank-r matrix, r QRP steps span the column space."""
+    rng = np.random.default_rng(1)
+    m, n, r = 60, 20, 5
+    a = rng.standard_normal((m, r)) @ rng.standard_normal((r, n))
+    a = jnp.asarray(a.astype(np.float32))
+    q = qrp_householder(a, r)[0] if method == "householder" else qrp_gram(a, r)[0]
+    u = svd_factor(a, r)
+    assert _subspace_angle(q, u) < 1e-2
+
+
+def test_householder_and_gram_pick_same_pivots():
+    """Pivoted Cholesky on A^T A == column-pivoted QR on A (exact arith).
+    Columns get well-separated norms so f32 rounding cannot tie-swap."""
+    rng = np.random.default_rng(2)
+    scales = 2.0 ** -np.arange(10)
+    a = rng.standard_normal((50, 10)).astype(np.float32) * scales[rng.permutation(10)]
+    a = jnp.asarray(a)
+    _, piv_h = qrp_householder(a, 6)
+    _, piv_g = qrp_gram(a, 6)
+    # identical in exact arithmetic; f32 residual-norm ties can swap the
+    # trailing picks, so compare the leading (unambiguous) pivots.
+    assert list(np.asarray(piv_h))[:4] == list(np.asarray(piv_g))[:4]
+
+
+def test_pivot_order_decreasing_weight():
+    """Paper Eq. 15: pivots are selected heaviest-first."""
+    rng = np.random.default_rng(3)
+    scales = np.array([100.0, 10.0, 1.0, 0.1])
+    a = rng.standard_normal((40, 4)) * scales
+    _, piv = qrp_householder(jnp.asarray(a.astype(np.float32)), 4)
+    assert list(np.asarray(piv)) == [0, 1, 2, 3]
+
+
+def test_flop_models_match_paper():
+    # paper Sec III-D: QRP 2mn^2 - 2n^3/3, SVD 2mn^2 + 11n^3
+    assert qrp_flops(100, 10) == 2 * 100 * 100 - 2 * 1000 // 3
+    assert svd_flops(100, 10) == 2 * 100 * 100 + 11 * 1000
+    assert qrp_flops(20000, 32) < svd_flops(20000, 32)
+
+
+@given(
+    m=st.integers(8, 48), n=st.integers(2, 12), seed=st.integers(0, 99),
+)
+@settings(max_examples=20, deadline=None)
+def test_projection_never_increases_residual(m, n, seed):
+    """||A - QQ^T A||_F <= ||A||_F and decreases with rank (property)."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+    prev = float(jnp.linalg.norm(a))
+    for r in (1, min(3, n), min(6, n)):
+        q, _ = qrp_householder(a, r)
+        res = float(jnp.linalg.norm(a - q @ (q.T @ a)))
+        assert res <= prev + 1e-4
+        prev = res

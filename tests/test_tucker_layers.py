@@ -1,0 +1,39 @@
+"""Paper technique inside the LM stack: Tucker-factorized layers."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.tucker_layers import (
+    expert_compression_ratio, tucker_expert_apply, tucker_linear_apply,
+    tuckerize_expert_stack, tuckerize_linear,
+)
+
+
+def test_tucker_linear_exact_for_low_rank_weight():
+    rng = np.random.default_rng(0)
+    w = (rng.standard_normal((64, 8)) @ rng.standard_normal((8, 48))).astype(np.float32)
+    p = tuckerize_linear(jnp.asarray(w), (8, 8))
+    x = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+    got = tucker_linear_apply(p, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x) @ w, rtol=1e-3, atol=1e-3)
+
+
+def test_tucker_expert_stack_reconstructs():
+    rng = np.random.default_rng(1)
+    e, d, f, r = 6, 24, 16, 4
+    core = rng.standard_normal((r, r, r))
+    ue = np.linalg.qr(rng.standard_normal((e, r)))[0]
+    ud = np.linalg.qr(rng.standard_normal((d, r)))[0]
+    uf = np.linalg.qr(rng.standard_normal((f, r)))[0]
+    experts = np.einsum("abc,ea,db,fc->edf", core, ue, ud, uf).astype(np.float32)
+    p = tuckerize_expert_stack(jnp.asarray(experts), (r, r, r))
+    x = jnp.asarray(rng.standard_normal((5, d)).astype(np.float32))
+    for ei in range(e):
+        got = tucker_expert_apply(p, ei, x)
+        want = np.asarray(x) @ experts[ei]
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+def test_expert_compression_ratio_positive():
+    assert expert_compression_ratio(32, 1024, 512, (8, 64, 64)) > 10
