@@ -25,3 +25,22 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> Tuple[float
 
 def csv_row(*cols) -> str:
     return ",".join(str(c) for c in cols)
+
+
+def engine_list(engine: str) -> list:
+    """Expand a benchmark ``--engine`` value to the engines to time.
+    Defaulting to 'both' keeps the standing kernel-vs-oracle maxerr check in
+    every aggregate run, even on CPU where 'auto' would resolve to xla only."""
+    from repro.core.engine import resolve_engine
+
+    if engine == "both":
+        return ["xla", "pallas"]
+    return [resolve_engine(engine)]
+
+
+def add_engine_arg(parser) -> None:
+    parser.add_argument(
+        "--engine", nargs="?", const="both", default="both",
+        choices=("xla", "pallas", "auto", "both"),
+        help="sweep engine(s) to time (default/bare --engine: both)",
+    )

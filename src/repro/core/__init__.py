@@ -6,10 +6,18 @@ Modules mirror the paper's accelerator decomposition:
   kron.py         sparse Kron-accumulation, module 2 (Sec. III-C, Alg. 4)
   qrp.py          QR with column pivoting, module 3 (Sec. III-D)
   hooi.py         Alg. 1 (dense baseline) + Alg. 2 (sparse) drivers
+  engine.py       sweep engine selection: XLA vs Pallas-kernel hot loops
   reconstruct.py  Eq. 7 reconstruction + error metrics
   distributed.py  pod-scale shard_map data-parallel Alg. 2
 """
 from repro.core.coo import SparseCOO, fold_dense, unfold_dense
+from repro.core.engine import (
+    ENGINES,
+    SweepEngine,
+    available_engines,
+    make_engine,
+    resolve_engine,
+)
 from repro.core.hooi import HooiResult, hooi_dense, hooi_sparse, sparse_sweep
 from repro.core.kron import (
     kron_rows,

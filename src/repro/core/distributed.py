@@ -33,6 +33,7 @@ from repro.core.kron import kron_rows
 from repro.core.qrp import qrp, svd_factor
 from repro.core.ttm import ttm_unfolded
 from repro.core.coo import fold_dense
+from repro.utils.compat import shard_map
 
 
 def shard_nonzeros(
@@ -108,7 +109,7 @@ def make_distributed_sweep(
         P(*([None] * ndim)),
     )
 
-    fn = jax.shard_map(
+    fn = shard_map(
         sweep_body,
         mesh=mesh,
         in_specs=in_specs,

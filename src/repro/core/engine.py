@@ -1,0 +1,177 @@
+"""Sweep engine layer: selects *how* each ALS sweep's hot loops execute.
+
+The paper's accelerator splits Alg. 2 across a CPU (scheduling, QRP) and an
+FPGA (TTM module 1, Kron-accumulation module 2). Our analogue splits each
+sweep across two interchangeable execution engines:
+
+  ``xla``     the pure-jnp path (``core.kron.sparse_ttm_chain`` + einsum TTM)
+              — one fused XLA scatter-add, best on CPU and the correctness
+              oracle everywhere;
+  ``pallas``  the kernel path — nonzeros streamed through the fused
+              kron-contrib→one-hot-scatter Pallas pipeline
+              (``kernels.kron_kernel``) on a host-side ``SortedCOO`` schedule
+              (``sparse.layout``), core update on the blocked TTM kernel
+              (``kernels.ttm_kernel``). Mosaic on TPU; interpret mode
+              elsewhere (slow but exact, which keeps CPU CI meaningful);
+  ``auto``    ``pallas`` when a TPU is attached, ``xla`` otherwise.
+
+Engines are differentially tested against the dense ``ttm_chain`` oracle in
+``tests/test_engine.py`` — any new engine must pass that harness before it
+can be selected here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Dict, List, Optional, Sequence
+
+import jax
+
+from repro.core.coo import SparseCOO
+from repro.sparse.layout import KronReusePlan, SortedCOO, build_kron_reuse, build_mode_layout
+
+ENGINES = ("xla", "pallas", "auto")
+
+
+def pallas_available() -> bool:
+    """Can the Pallas kernel path run here at all? (Import-level check; on
+    non-TPU backends the kernels run in interpret mode.)"""
+    try:
+        from jax.experimental import pallas  # noqa: F401
+        from jax.experimental.pallas import tpu  # noqa: F401
+    except Exception:  # pragma: no cover - exercised via monkeypatch in tests
+        return False
+    return True
+
+
+def resolve_engine(engine: str = "auto") -> str:
+    """Map a requested engine to the one that will actually run.
+
+    ``auto`` picks ``pallas`` on TPU and ``xla`` elsewhere. An explicit
+    ``pallas`` request is honored even off-TPU (interpret mode) unless the
+    Pallas import itself is unavailable, in which case we warn and fall back
+    to ``xla`` so CPU-only hosts stay green.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    if engine == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if engine == "pallas" and not pallas_available():
+        warnings.warn(
+            "Pallas is unavailable in this jax install; sparse sweep falling "
+            "back to the XLA engine.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return "xla"
+    return engine
+
+
+@dataclasses.dataclass
+class SweepEngine:
+    """Sweep executor: engine choice + cached per-mode layouts.
+
+    Build via :func:`make_engine` and reuse across sweeps — the layouts are
+    the expensive host-side part, exactly like the paper builds its dataflow
+    schedule once per dataset. Handing it a different tensor is safe: the
+    schedule cache rebinds (rebuilds) on an indices/shape change.
+    """
+
+    name: str  # resolved: "xla" or "pallas"
+    bn: int = 128
+    bi: int = 128
+    use_kron_reuse: bool = False
+    interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
+    layouts: Dict[int, SortedCOO] = dataclasses.field(default_factory=dict)
+    kron_plans: Dict[int, KronReusePlan] = dataclasses.field(default_factory=dict)
+    # the indices array the cached schedules were built from; holding the
+    # reference keeps the identity check below sound (no id reuse).
+    _bound_indices: Optional[jax.Array] = None
+    _bound_shape: Optional[tuple] = None
+
+    # -- schedule caches --------------------------------------------------
+    def _bind(self, coo: SparseCOO) -> None:
+        """Invalidate cached schedules when handed a different tensor —
+        replaying one tensor's order/valid/rel_row against another's indices
+        would be silently wrong, not an error."""
+        if self._bound_indices is not coo.indices or self._bound_shape != coo.shape:
+            self.layouts.clear()
+            self.kron_plans.clear()
+            self._bound_indices = coo.indices
+            self._bound_shape = tuple(coo.shape)
+
+    def mode_layout(self, coo: SparseCOO, mode: int) -> SortedCOO:
+        self._bind(coo)
+        if mode not in self.layouts:
+            self.layouts[mode] = build_mode_layout(coo, mode, bn=self.bn, bi=self.bi)
+        return self.layouts[mode]
+
+    def kron_plan(self, coo: SparseCOO, mode: int) -> KronReusePlan:
+        self._bind(coo)
+        if mode not in self.kron_plans:
+            self.kron_plans[mode] = build_kron_reuse(coo, mode)
+        return self.kron_plans[mode]
+
+    # -- Alg. 2 line 5: Y_(n) over nonzeros only --------------------------
+    def mode_unfolding(
+        self, coo: SparseCOO, factors: Sequence[jax.Array], mode: int
+    ) -> jax.Array:
+        """Mode-``mode`` unfolding of the skipped-mode TTM chain:
+        Y_(n) of shape (I_n, prod_{t != n} R_t)."""
+        if self.name == "pallas":
+            return self._mode_unfolding_pallas(coo, factors, mode)
+        from repro.core.kron import sparse_ttm_chain, sparse_ttm_chain_reuse
+
+        if self.use_kron_reuse:
+            return sparse_ttm_chain_reuse(coo, factors, mode, self.kron_plan(coo, mode))
+        return sparse_ttm_chain(coo, factors, mode)
+
+    def _mode_unfolding_pallas(
+        self, coo: SparseCOO, factors: Sequence[jax.Array], mode: int
+    ) -> jax.Array:
+        from repro.kernels import ops
+
+        return ops.sparse_ttm_chain_kernel(
+            coo,
+            factors,
+            mode,
+            plan=self.mode_layout(coo, mode) if coo.nnz else None,
+            interpret=self.interpret,
+        )
+
+    # -- Alg. 2 line 9: core from the last unfolding (module 1) -----------
+    def core_unfolding(self, y_n: jax.Array, u_last: jax.Array) -> jax.Array:
+        """G_(N) = U_N^T Y_(N) (Eq. 12): (R_N, prod_{t != N} R_t)."""
+        if self.name == "pallas":
+            from repro.kernels import ops
+
+            return ops.ttm(y_n.T, u_last.T, interpret=self.interpret).T
+        from repro.core.ttm import ttm_unfolded
+
+        return ttm_unfolded(y_n.T, u_last.T).T
+
+
+def make_engine(
+    engine: str = "auto",
+    *,
+    bn: int = 128,
+    bi: int = 128,
+    use_kron_reuse: bool = False,
+    interpret: Optional[bool] = None,
+) -> SweepEngine:
+    """Resolve ``engine`` and build a reusable :class:`SweepEngine`."""
+    return SweepEngine(
+        name=resolve_engine(engine),
+        bn=bn,
+        bi=bi,
+        use_kron_reuse=use_kron_reuse,
+        interpret=interpret,
+    )
+
+
+def available_engines() -> List[str]:
+    """Engines that can actually execute on this host (test harness helper)."""
+    out = ["xla"]
+    if pallas_available():
+        out.append("pallas")
+    return out

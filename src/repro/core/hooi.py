@@ -22,9 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.coo import SparseCOO, fold_dense, unfold_dense
+from repro.core.engine import SweepEngine, make_engine, resolve_engine
 from repro.core.kron import (
     KronReusePlan,
-    precompute_kron_reuse,
     sparse_ttm_chain,
     sparse_ttm_chain_reuse,
 )
@@ -38,6 +38,7 @@ class HooiResult:
     factors: List[jax.Array]  # U_n: (I_n, R_n), orthonormal columns
     rel_error: jax.Array  # ||X - Xhat||_F / ||X||_F
     fit_history: np.ndarray  # per-sweep relative error
+    engine: str = "xla"  # resolved sweep engine ("xla" for the dense driver)
 
 
 def _factor_update(y_n: jax.Array, r: int, method: str) -> jax.Array:
@@ -136,21 +137,33 @@ def sparse_sweep(
     ranks: Sequence[int],
     method: str,
     reuse_plans: Optional[Sequence[Optional[KronReusePlan]]] = None,
+    engine: Optional[SweepEngine] = None,
 ) -> Tuple[List[jax.Array], jax.Array]:
-    """One ALS sweep of Alg. 2 (lines 3-9). Returns (factors, core)."""
+    """One ALS sweep of Alg. 2 (lines 3-9). Returns (factors, core).
+
+    With ``engine`` set, the hot loops (Kron-accumulation, core TTM) execute
+    on that engine (see ``core.engine``); otherwise the legacy XLA path with
+    optional per-mode ``reuse_plans`` runs.
+    """
     n = coo.ndim
     y_n = None
     for mode in range(n):
-        plan = reuse_plans[mode] if reuse_plans is not None else None
-        if plan is not None:
-            y_n = sparse_ttm_chain_reuse(coo, factors, mode, plan)
+        if engine is not None:
+            y_n = engine.mode_unfolding(coo, factors, mode)
         else:
-            y_n = sparse_ttm_chain(coo, factors, mode)
+            plan = reuse_plans[mode] if reuse_plans is not None else None
+            if plan is not None:
+                y_n = sparse_ttm_chain_reuse(coo, factors, mode, plan)
+            else:
+                y_n = sparse_ttm_chain(coo, factors, mode)
         factors[mode] = _factor_update(y_n, ranks[mode], method)
     # Alg. 2 line 9: G <- Y x_N U_N^T on the (dense, small) last unfolding.
     # y_n is Y_(N): (I_N, R_1*...*R_{N-1}); the TTM module computes
     # G_(N) = U_N^T Y_(N)  — this is the paper's FPGA TTM (Eq. 12).
-    g_n = ttm_unfolded(y_n.T, factors[n - 1].T).T  # (R_N, prod R_t)
+    if engine is not None:
+        g_n = engine.core_unfolding(y_n, factors[n - 1])  # (R_N, prod R_t)
+    else:
+        g_n = ttm_unfolded(y_n.T, factors[n - 1].T).T  # (R_N, prod R_t)
     core = fold_dense(g_n, n - 1, list(ranks))
     return factors, core
 
@@ -170,6 +183,7 @@ def hooi_sparse(
     key: Optional[jax.Array] = None,
     tol: float = 0.0,
     use_kron_reuse: bool = False,
+    engine: str = "auto",
 ) -> HooiResult:
     """The paper's sparse Tucker decomposition (Alg. 2).
 
@@ -178,34 +192,40 @@ def hooi_sparse(
       ranks: multilinear rank (R_1..R_N).
       n_iter: max ALS sweeps ("power iterations" in the paper).
       method: 'householder' (paper QRP), 'gram' (TPU QRP variant) or 'svd'.
-      use_kron_reuse: enable the paper's Kronecker-row dedup (Sec. III-C).
+      use_kron_reuse: enable the paper's Kronecker-row dedup (Sec. III-C)
+        on the XLA engine (the Pallas schedule has its own reuse layout).
+      engine: 'xla', 'pallas' or 'auto' — how the sweep's hot loops execute
+        (see ``core.engine``). 'auto' picks pallas on TPU, xla elsewhere;
+        'pallas' without a usable Pallas install warns and falls back.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
-    n = coo.ndim
     ranks = effective_ranks(coo.shape, ranks)
     factors = init_factors(coo.shape, ranks, key)
-    plans = (
-        [precompute_kron_reuse(coo, m) for m in range(n)] if use_kron_reuse else None
-    )
+    engine_name = resolve_engine(engine)
+    eng: Optional[SweepEngine] = None
+    if engine_name == "pallas" or use_kron_reuse:
+        eng = make_engine(engine_name, use_kron_reuse=use_kron_reuse)
     xnorm2 = jnp.square(coo.norm())
     hist = []
     core = None
     for _ in range(n_iter):
-        if plans is None:
+        if eng is None:
             fs, core = _jitted_sweep(
                 coo.indices, coo.values, tuple(factors),
                 shape=coo.shape, ranks=tuple(ranks), method=method,
             )
             factors = list(fs)
         else:
-            factors, core = sparse_sweep(coo, factors, ranks, method, plans)
+            factors, core = sparse_sweep(coo, factors, ranks, method, engine=eng)
         err = jnp.sqrt(jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)) / jnp.sqrt(
             xnorm2
         )
         hist.append(float(err))
         if tol and len(hist) > 1 and abs(hist[-2] - hist[-1]) < tol:
             break
-    return HooiResult(core, factors, jnp.asarray(hist[-1]), np.asarray(hist))
+    return HooiResult(
+        core, factors, jnp.asarray(hist[-1]), np.asarray(hist), engine=engine_name
+    )
 
 
 def tucker_complete_dense(

@@ -22,13 +22,14 @@ unique Kronecker row once.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.coo import SparseCOO
+from repro.sparse.layout import KronReusePlan, build_kron_reuse
 
 
 def kron_rows(rows: Sequence[jax.Array]) -> jax.Array:
@@ -59,6 +60,15 @@ def gathered_factor_rows(
     return rows
 
 
+def zero_unfolding(
+    shape: Sequence[int], factors: Sequence[jax.Array], skip_mode: int
+) -> jax.Array:
+    """The Y_(n) of a tensor with no nonzeros: exactly zero, f32. Single
+    definition of the empty-tensor contract shared by every chain variant."""
+    k_cols = int(np.prod([f.shape[1] for t, f in enumerate(factors) if t != skip_mode]))
+    return jnp.zeros((shape[skip_mode], k_cols), dtype=jnp.float32)
+
+
 def sparse_ttm_chain(
     coo: SparseCOO,
     factors: Sequence[jax.Array],
@@ -79,6 +89,8 @@ def sparse_ttm_chain(
     Returns:
       Y_(n) of shape (I_n, prod_{t != n} R_t), f32.
     """
+    if coo.indices.shape[0] == 0:
+        return zero_unfolding(coo.shape, factors, skip_mode)
     rows = gathered_factor_rows(coo, factors, skip_mode)
     k = kron_rows(rows)  # (nnz, K)
     dt = jnp.promote_types(jnp.promote_types(coo.values.dtype, k.dtype), jnp.float32)
@@ -88,24 +100,11 @@ def sparse_ttm_chain(
     return out.at[i_n].add(contrib)
 
 
-class KronReusePlan(NamedTuple):
-    """Host-side dedup of non-mode index tuples (paper's Kron reuse trick)."""
-
-    unique_indices: np.ndarray  # (n_unique, N-1) indices into each non-mode factor
-    inverse: np.ndarray  # (nnz,) map nonzero -> unique kron row
-    modes: Tuple[int, ...]  # descending non-mode order matching kron_rows
-
-
 def precompute_kron_reuse(coo: SparseCOO, skip_mode: int) -> KronReusePlan:
     """Deduplicate the (N-1)-tuples of non-mode indices so each distinct
-    Kronecker row is computed once (Section III-C). Host-side (np.unique is
-    data-dependent and not jittable); the returned plan is static metadata.
-    """
-    idx = np.asarray(coo.indices)
-    modes = tuple(t for t in range(coo.ndim - 1, -1, -1) if t != skip_mode)
-    sub = idx[:, list(modes)]
-    uniq, inverse = np.unique(sub, axis=0, return_inverse=True)
-    return KronReusePlan(uniq.astype(np.int32), inverse.astype(np.int32), modes)
+    Kronecker row is computed once (Section III-C). Alias of
+    :func:`repro.sparse.layout.build_kron_reuse` (kept for API stability)."""
+    return build_kron_reuse(coo, skip_mode)
 
 
 def sparse_ttm_chain_reuse(
@@ -118,6 +117,8 @@ def sparse_ttm_chain_reuse(
     once and gathering per-nonzero (paper's reuse optimization). Exact same
     result; fewer multiplies when nonzeros share non-mode index tuples.
     """
+    if coo.indices.shape[0] == 0:
+        return zero_unfolding(coo.shape, factors, skip_mode)
     rows = [
         factors[t][jnp.asarray(plan.unique_indices[:, c])]
         for c, t in enumerate(plan.modes)

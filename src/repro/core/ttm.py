@@ -26,13 +26,20 @@ def ttm(x: jax.Array, u: jax.Array, mode: int) -> jax.Array:
     return jnp.moveaxis(out, -1, mode)
 
 
-def ttm_unfolded(y_mat: jax.Array, u: jax.Array) -> jax.Array:
+def ttm_unfolded(
+    y_mat: jax.Array, u: jax.Array, *, engine: Optional[str] = None
+) -> jax.Array:
     """The paper's TTM on unfolded operands: ``G = Y @ Uᵀ`` where
     ``Y: (R1R2, I3)`` holds mode-3-fiber rows and ``U: (R3, I3)``.
 
     This is exactly Alg. 3's loop nest (tmp[i,k] += Y[i,t]·U[k,t]) collapsed
-    to a matmul; the Pallas kernel tiles this contraction for VMEM/MXU.
+    to a matmul; with ``engine="pallas"`` it dispatches to the blocked Pallas
+    kernel (``kernels.ttm_kernel``) that tiles the contraction for VMEM/MXU.
     """
+    if engine == "pallas":
+        from repro.kernels import ops
+
+        return ops.ttm(y_mat, u)
     return jnp.einsum("it,kt->ik", y_mat, u)
 
 

@@ -122,37 +122,19 @@ class ScatterPlan(NamedTuple):
 def build_scatter_plan(
     rows: np.ndarray, n_rows: int, bn: int = DEFAULT_BN, bi: int = DEFAULT_BI
 ) -> ScatterPlan:
-    rows = np.asarray(rows)
-    nnz = rows.shape[0]
-    n_row_blocks = max(1, -(-n_rows // bi))
-    grp = rows // bi
-    order_parts = []
-    blkmap = []
-    first = []
-    for g in range(n_row_blocks):
-        members = np.nonzero(grp == g)[0]
-        if members.size == 0:
-            continue
-        pad = (-members.size) % bn
-        padded = np.concatenate([members, np.full((pad,), -1, dtype=members.dtype)])
-        order_parts.append(padded)
-        nb = padded.size // bn
-        blkmap.extend([g] * nb)
-        first.extend([1] + [0] * (nb - 1))
-    if not order_parts:  # completely empty tensor
-        order_parts = [np.full((bn,), -1, dtype=np.int64)]
-        blkmap, first = [0], [1]
-    order = np.concatenate(order_parts)
-    valid = (order >= 0).astype(np.float32)
-    safe = np.where(order >= 0, order, 0)
-    rel = rows[safe] % bi
-    rel = np.where(order >= 0, rel, 0)
+    """Thin wrapper over the shared grouping in ``sparse.layout`` (one
+    implementation of the pad/group/order construction for both plan types)."""
+    from repro.sparse.layout import build_schedule
+
+    order, valid, rel, blkmap, first, n_row_blocks, _ = build_schedule(
+        rows, n_rows, bn, bi
+    )
     return ScatterPlan(
-        order=safe.astype(np.int32),
+        order=order,
         valid=valid,
-        rel_row=rel.astype(np.int32),
-        blkmap=np.asarray(blkmap, dtype=np.int32),
-        first=np.asarray(first, dtype=np.int32),
+        rel_row=rel,
+        blkmap=blkmap,
+        first=first,
         n_row_blocks=n_row_blocks,
         bn=bn,
         bi=bi,
@@ -218,11 +200,101 @@ def scatter_rows_pallas(
         bi=plan.bi,
         interpret=interpret,
     )
-    # groups with zero nonzeros were never visited -> their rows may be
-    # uninitialized in interpret mode; mask them explicitly.
+    return _mask_unvisited(out, plan, n_rows)
+
+
+def _mask_unvisited(out: jax.Array, plan, n_rows: int) -> jax.Array:
+    """Row blocks with zero nonzeros are never visited by the grid -> their
+    rows may be uninitialized in interpret mode; mask them explicitly."""
     visited = np.zeros((plan.n_row_blocks,), dtype=bool)
     visited[np.asarray(plan.blkmap)] = True
     if visited.all():
         return out
     mask = np.repeat(visited, plan.bi)[:n_rows]
     return jnp.where(jnp.asarray(mask)[:, None], out, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel: Kron rows + one-hot scatter in a single pipeline step.
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(blkmap_ref, first_ref, a_ref, b_ref, v_ref, rel_ref, o_ref):
+    """One nnz block: build the Kron contributions (VPU outer product) and
+    immediately accumulate them into the resident Y row block (MXU one-hot
+    matmul) — the contrib matrix never round-trips through HBM. This is the
+    closest TPU analogue of the paper's fully pipelined FPGA dataflow, where
+    multiplier outputs feed the BRAM accumulator directly."""
+    blk = pl.program_id(0)
+
+    @pl.when(first_ref[blk] == 1)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]  # (BN, Ra)
+    b = b_ref[...]  # (BN, Rb)
+    v = v_ref[...]  # (BN, 1) f32, zero on padding rows
+    bn, ra = a.shape
+    rb = b.shape[1]
+    kron = (a[:, :, None] * b[:, None, :]).reshape(bn, ra * rb)
+    contrib = kron.astype(jnp.float32) * v
+    rel = rel_ref[...]  # (BN, 1) int32
+    bi = o_ref.shape[0]
+    onehot = (rel == jax.lax.broadcasted_iota(jnp.int32, (bn, bi), 1)).astype(
+        jnp.float32
+    )
+    o_ref[...] += jnp.dot(onehot.T, contrib, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "bn", "bi", "interpret"))
+def _fused_call(blkmap, first, a, b, v, rel, *, n_rows, bn, bi, interpret):
+    nblocks = blkmap.shape[0]
+    n_row_blocks = -(-n_rows // bi)
+    ra, rb = a.shape[1], b.shape[1]
+    out = pl.pallas_call(
+        _fused_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nblocks,),
+            in_specs=[
+                pl.BlockSpec((bn, ra), lambda blk, m, f: (blk, 0)),
+                pl.BlockSpec((bn, rb), lambda blk, m, f: (blk, 0)),
+                pl.BlockSpec((bn, 1), lambda blk, m, f: (blk, 0)),
+                pl.BlockSpec((bn, 1), lambda blk, m, f: (blk, 0)),
+            ],
+            out_specs=pl.BlockSpec((bi, ra * rb), lambda blk, m, f: (m[blk], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_row_blocks * bi, ra * rb), jnp.float32),
+        interpret=interpret,
+    )(blkmap, first, a, b, v[:, None].astype(jnp.float32), rel[:, None])
+    return out[:n_rows]
+
+
+def fused_kron_scatter_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    v: jax.Array,
+    plan,
+    n_rows: int,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Y_(n)[i_n] += v * (a (x) b), fused: Alg. 4 + Eq. 13 in one kernel.
+
+    ``a``, ``b``, ``v`` must already be permuted into the plan's block order
+    (``plan.order``) with padding values zeroed (``plan.valid``); ``plan`` is
+    a ``ScatterPlan`` or ``sparse.layout.SortedCOO`` (same schedule fields).
+    """
+    out = _fused_call(
+        jnp.asarray(plan.blkmap),
+        jnp.asarray(plan.first),
+        a,
+        b,
+        v,
+        jnp.asarray(plan.rel_row),
+        n_rows=n_rows,
+        bn=plan.bn,
+        bi=plan.bi,
+        interpret=interpret,
+    )
+    return _mask_unvisited(out, plan, n_rows)

@@ -50,18 +50,27 @@ def sparse_ttm_chain_kernel(
     plan: Optional[ScatterPlan] = None,
     *,
     interpret: Optional[bool] = None,
+    fused: bool = True,
 ) -> jax.Array:
-    """Full Alg. 2 line 5 on the kernel path: gather rows -> Kron kernel ->
-    one-hot-matmul scatter kernel. 3-way tensors only (the paper's case);
-    higher orders fall back to chained kron_contrib calls.
+    """Full Alg. 2 line 5 on the kernel path.
 
-    The ``plan`` (host-side sort/group of nonzeros by output row block) plays
-    the role of the paper's FPGA dataflow schedule; build it once per
-    (tensor, mode) and reuse across sweeps.
+    3-way tensors (the paper's case) run the fused kron-contrib→one-hot-
+    scatter pipeline in a single kernel; higher orders fall back to chained
+    ``kron_contrib`` calls followed by the standalone scatter kernel.
+
+    The ``plan`` — a ``ScatterPlan`` or a ``sparse.layout.SortedCOO`` (the
+    engine's richer schedule, same fields) — plays the role of the paper's
+    FPGA dataflow schedule; build it once per (tensor, mode) and reuse
+    across sweeps. ``hooi_sparse(..., engine="pallas")`` does exactly that
+    via ``core.engine.SweepEngine``.
     """
     interp = default_interpret() if interpret is None else interpret
     n = coo.ndim
     n_rows = coo.shape[skip_mode]
+    if coo.nnz == 0:
+        from repro.core.kron import zero_unfolding
+
+        return zero_unfolding(coo.shape, factors, skip_mode)
     if plan is None:
         plan = build_scatter_plan(np.asarray(coo.indices[:, skip_mode]), n_rows)
     order = jnp.asarray(plan.order)
@@ -71,6 +80,12 @@ def sparse_ttm_chain_kernel(
 
     modes = [t for t in range(n - 1, -1, -1) if t != skip_mode]
     rows = [factors[t][idx[:, t]] for t in modes]
+    if len(rows) == 1:  # order-2 tensor: the "Kron row" is a single factor row
+        rows.append(jnp.ones((rows[0].shape[0], 1), dtype=rows[0].dtype))
+    if len(rows) == 2 and fused:
+        return kron_kernel.fused_kron_scatter_pallas(
+            rows[0], rows[1], vals, plan, n_rows, interpret=interp
+        )
     contrib = kron_contrib(rows[0], rows[1], vals, interpret=interp)
     for extra in rows[2:]:  # order > 3: fold further factors in
         contrib = kron_contrib(contrib, extra, jnp.ones_like(vals), interpret=interp)

@@ -84,18 +84,22 @@ def ttm_pallas(
     r3, i3u = u.shape
     assert i3 == i3u, (y.shape, u.shape)
     bl_ = min(bl, max(8, l))
+    # clamp the contraction block to I3 rounded up to a lane multiple — a
+    # small-I3 call (e.g. the HOOI core update on a rank-4 sweep) would
+    # otherwise zero-pad the contraction 25x past the data.
+    bk_ = min(bk, max(128, -(-i3 // 128) * 128))
     # pad everything to tile multiples (MXU-aligned lanes).
-    yp = _pad_to(_pad_to(y, 0, bl_), 1, bk)
-    up = _pad_to(_pad_to(u, 0, 8), 1, bk)
+    yp = _pad_to(_pad_to(y, 0, bl_), 1, bk_)
+    up = _pad_to(_pad_to(u, 0, 8), 1, bk_)
     lp, i3p = yp.shape
     r3p = up.shape[0]
-    grid = (lp // bl_, i3p // bk)
+    grid = (lp // bl_, i3p // bk_)
     out = pl.pallas_call(
         _ttm_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bl_, bk), lambda i, k: (i, k)),
-            pl.BlockSpec((r3p, bk), lambda i, k: (0, k)),
+            pl.BlockSpec((bl_, bk_), lambda i, k: (i, k)),
+            pl.BlockSpec((r3p, bk_), lambda i, k: (0, k)),
         ],
         out_specs=pl.BlockSpec((bl_, r3p), lambda i, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((lp, r3p), jnp.float32),

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.utils.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 (one v5e pod, 256 chips) or 2x16x16 (two pods, 512 chips).
@@ -19,15 +21,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """Whatever devices exist, as a (data, model) mesh — smoke tests (1 CPU
     device) and small real runs."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    return make_mesh((n, 1), ("data", "model"))

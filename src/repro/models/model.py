@@ -18,6 +18,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.utils import compat
 from repro.models import transformer as tfm
 from repro.models.layers import pack_bf16, rmsnorm, softmax_cross_entropy, unpack_bf16
 from repro.models.mamba2 import SsmState
@@ -230,7 +231,7 @@ def _barrier(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     if not leaves:
         return tree
-    leaves = list(jax.lax.optimization_barrier(tuple(leaves)))
+    leaves = list(compat.optimization_barrier(tuple(leaves)))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -1,3 +1,9 @@
+from repro.sparse.layout import (
+    KronReusePlan,
+    SortedCOO,
+    build_kron_reuse,
+    build_mode_layout,
+)
 from repro.sparse.generators import (
     random_sparse_tensor,
     low_rank_sparse_tensor,

@@ -1,0 +1,187 @@
+"""Host-side sparse layouts for the sweep engine.
+
+The paper's FPGA streams COO nonzeros through the Kron-accumulation pipeline
+in whatever order the CPU feeds them, keeping a row batch of Y_(n) resident
+in BRAM (Sec. III-B/C). The TPU analogue needs that schedule made explicit:
+nonzeros must arrive grouped by output row-block so the scatter kernel can
+keep each Y_(n) block resident in VMEM, and every block must be padded to
+the kernel's block size. This module builds that schedule — once per
+(tensor, mode), on the host — as static metadata the jitted kernels index
+with scalar prefetch.
+
+``build_mode_layout`` subsumes the two older host-side precomputations:
+
+  * ``core.kron.precompute_kron_reuse`` — the paper's Sec. III-C trick of
+    computing each distinct non-mode Kronecker row once (kept here as the
+    ``kron_unique``/``kron_inverse`` fields, in *original* nonzero order so
+    the XLA reuse path is unchanged);
+  * ``kernels.kron_kernel.build_scatter_plan`` — the row-block grouping the
+    one-hot-matmul scatter kernel needs (kept as the embedded
+    ``ScatterPlan``), but built from a mode-sort in O(nnz log nnz) instead
+    of a per-block scan in O(nnz * n_blocks).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+if TYPE_CHECKING:  # runtime access is duck-typed (indices/shape/ndim) —
+    # importing core.coo here would close an import cycle through
+    # core/__init__ -> engine -> this module.
+    from repro.core.coo import SparseCOO
+
+
+class KronReusePlan(NamedTuple):
+    """Host-side dedup of non-mode index tuples (paper's Kron reuse trick,
+    Sec. III-C). ``modes`` is the descending non-mode order matching
+    ``core.kron.kron_rows`` column ordering."""
+
+    unique_indices: np.ndarray  # (n_unique, N-1) indices into non-mode factors
+    inverse: np.ndarray  # (nnz,) map nonzero -> unique kron row
+    modes: Tuple[int, ...]
+
+
+def build_kron_reuse(coo: SparseCOO, skip_mode: int) -> KronReusePlan:
+    """Deduplicate the (N-1)-tuples of non-mode indices so each distinct
+    Kronecker row is computed once. Host-side (np.unique is data-dependent
+    and not jittable); the returned plan is static metadata in original
+    nonzero order."""
+    idx = np.asarray(coo.indices)
+    modes = tuple(t for t in range(coo.ndim - 1, -1, -1) if t != skip_mode)
+    sub = idx[:, list(modes)]
+    uniq, inverse = np.unique(sub, axis=0, return_inverse=True)
+    return KronReusePlan(
+        uniq.astype(np.int32), inverse.reshape(-1).astype(np.int32), modes
+    )
+
+
+class SortedCOO(NamedTuple):
+    """Nonzeros of one tensor, permuted into mode-major row-block order and
+    padded to block multiples — the engine's per-mode streaming schedule.
+
+    All arrays are host-side numpy (static metadata); ``nnz_padded`` rows
+    where padding entries carry ``valid == 0`` and a safe gather index of 0.
+    """
+
+    mode: int
+    shape: Tuple[int, ...]
+    order: np.ndarray  # (nnz_padded,) gather index into original nonzeros
+    valid: np.ndarray  # (nnz_padded,) f32 1.0 real / 0.0 padding
+    rel_row: np.ndarray  # (nnz_padded,) row index within the target row block
+    blkmap: np.ndarray  # (n_blocks,) target row-block of each nnz block
+    first: np.ndarray  # (n_blocks,) 1 iff first block of its target
+    segments: np.ndarray  # (I_mode + 1,) row segment boundaries (sorted order)
+    n_row_blocks: int
+    bn: int  # nonzeros per block
+    bi: int  # output rows per block
+    kron: Optional[KronReusePlan]  # None unless reuse=True
+
+    @property
+    def nnz_padded(self) -> int:
+        return int(self.order.shape[0])
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.blkmap.shape[0])
+
+    def row_segment(self, i: int) -> Tuple[int, int]:
+        """[start, stop) of the nonzeros with mode-coordinate ``i`` in the
+        mode-sorted (pre-padding) order — the paper's (j,k)-sharing segments."""
+        return int(self.segments[i]), int(self.segments[i + 1])
+
+
+def build_schedule(
+    rows: np.ndarray, n_rows: int, bn: int, bi: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, int, np.ndarray]:
+    """Shared row-block grouping (the one implementation behind both
+    ``build_mode_layout`` and ``kernels.kron_kernel.build_scatter_plan``):
+    stable-sort ``rows``, group into BI-row output blocks, pad each group to
+    a BN multiple so every nnz block targets exactly one row block.
+
+    Returns ``(order, valid, rel_row, blkmap, first, n_row_blocks, perm)``
+    where ``order`` holds safe gather indices (padding slots point at 0 with
+    ``valid == 0``) and ``perm`` is the plain stable sort by row (pre-padding,
+    for segment metadata). O(nnz log nnz).
+    """
+    if bn <= 0 or bi <= 0:
+        raise ValueError(f"block sizes must be positive, got bn={bn} bi={bi}")
+    rows = np.asarray(rows).astype(np.int64)
+    nnz = rows.shape[0]
+    n_row_blocks = max(1, -(-n_rows // bi))
+    perm = np.argsort(rows, kind="stable")
+    sorted_rows = rows[perm]
+    # row-block group boundaries within the sorted order.
+    grp_bounds = np.searchsorted(sorted_rows, np.arange(0, n_row_blocks + 1) * bi)
+    order_parts = []
+    blkmap = []
+    first = []
+    for g in range(n_row_blocks):
+        lo, hi = int(grp_bounds[g]), int(grp_bounds[g + 1])
+        if hi == lo:
+            continue
+        members = perm[lo:hi]
+        pad = (-members.size) % bn
+        padded = np.concatenate([members, np.full((pad,), -1, dtype=np.int64)])
+        order_parts.append(padded)
+        n_blocks = padded.size // bn
+        blkmap.extend([g] * n_blocks)
+        first.extend([1] + [0] * (n_blocks - 1))
+    if not order_parts:  # empty tensor: one all-padding block
+        order_parts = [np.full((bn,), -1, dtype=np.int64)]
+        blkmap, first = [0], [1]
+    order = np.concatenate(order_parts)
+    valid = (order >= 0).astype(np.float32)
+    safe = np.where(order >= 0, order, 0)
+    rel = rows[safe] % bi if nnz else np.zeros_like(safe)
+    rel = np.where(order >= 0, rel, 0)
+    return (
+        safe.astype(np.int32),
+        valid,
+        rel.astype(np.int32),
+        np.asarray(blkmap, dtype=np.int32),
+        np.asarray(first, dtype=np.int32),
+        n_row_blocks,
+        perm,
+    )
+
+
+def build_mode_layout(
+    coo: SparseCOO,
+    mode: int,
+    bn: int = 128,
+    bi: int = 128,
+    reuse: bool = False,
+) -> SortedCOO:
+    """Build the mode-``mode`` streaming schedule for one tensor (see
+    :func:`build_schedule`), plus the per-row segment boundaries and optional
+    Kron-reuse plan the engine wants alongside it."""
+    idx = np.asarray(coo.indices)
+    rows = idx[:, mode].astype(np.int64)
+    n_rows = int(coo.shape[mode])
+    order, valid, rel, blkmap, first, n_row_blocks, perm = build_schedule(
+        rows, n_rows, bn, bi
+    )
+    # per-row segment boundaries (paper Sec. III-C: nonzeros sharing the mode
+    # coordinate are consecutive, so their Kron rows share a Y_(n) row).
+    segments = np.searchsorted(rows[perm], np.arange(n_rows + 1))
+    return SortedCOO(
+        mode=mode,
+        shape=tuple(coo.shape),
+        order=order,
+        valid=valid,
+        rel_row=rel,
+        blkmap=blkmap,
+        first=first,
+        segments=segments.astype(np.int64),
+        n_row_blocks=n_row_blocks,
+        bn=bn,
+        bi=bi,
+        kron=build_kron_reuse(coo, mode) if reuse else None,
+    )
+
+
+def layout_padding_fraction(layout: SortedCOO) -> float:
+    """Fraction of streamed nonzero slots that are padding — the price of
+    block alignment (useful for picking bn on very sparse modes)."""
+    return 1.0 - float(layout.valid.sum()) / max(1, layout.nnz_padded)

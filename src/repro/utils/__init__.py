@@ -1,3 +1,4 @@
+from repro.utils.compat import make_mesh
 from repro.utils.tree import (
     tree_bytes,
     tree_count,

@@ -1,0 +1,81 @@
+"""Version-compat shims over the moving parts of the jax API.
+
+The repo targets the jax that ships in the container (0.4.x today) but is
+written against idioms that drift across minor releases. Every call site that
+would otherwise need a try/except imports the shim instead, so the drift is
+handled in exactly one place.
+
+Known drift handled here:
+  * ``jax.sharding.AxisType`` / ``axis_types=`` on ``jax.make_mesh`` —
+    introduced after 0.4.x (explicit-sharding work). On older jax every mesh
+    axis is implicitly "auto", so the argument is simply dropped.
+  * ``jax.shard_map`` (new spelling, ``check_vma=``) vs
+    ``jax.experimental.shard_map.shard_map`` (old spelling, ``check_rep=``).
+  * no differentiation rule for ``jax.lax.optimization_barrier`` on old jax.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+# Does this jax know about explicit/auto mesh axis types?
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+def auto_axis_types(n: int) -> Optional[tuple]:
+    """``(AxisType.Auto,) * n`` where supported, else None (old-jax default)."""
+    if HAS_AXIS_TYPES:
+        return (jax.sharding.AxisType.Auto,) * n
+    return None
+
+
+def make_mesh(
+    shape: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    axis_types: Optional[tuple] = None,
+) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with ``axis_types`` passed only where the installed
+    jax understands it. All axes default to Auto semantics either way."""
+    shape = tuple(shape)
+    axis_names = tuple(axis_names)
+    if HAS_AXIS_TYPES:
+        if axis_types is None:
+            axis_types = auto_axis_types(len(axis_names))
+        return jax.make_mesh(shape, axis_names, axis_types=axis_types)
+    return jax.make_mesh(shape, axis_names)
+
+
+@jax.custom_jvp
+def optimization_barrier(leaves):
+    """``jax.lax.optimization_barrier`` with an explicit differentiation rule.
+
+    Older jax (<= 0.4.x) has no JVP rule for the barrier primitive, so any
+    ``grad`` through it raises NotImplementedError. The barrier is the
+    identity function, so its JVP passes tangents straight through; the
+    primal keeps the real barrier (the hoisting protection it exists for).
+    """
+    return jax.lax.optimization_barrier(leaves)
+
+
+@optimization_barrier.defjvp
+def _optimization_barrier_jvp(primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return optimization_barrier(x), dx
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` (new API, ``check_vma=``) or
+    ``jax.experimental.shard_map.shard_map`` (old API, ``check_rep=``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

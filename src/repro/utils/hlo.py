@@ -153,9 +153,17 @@ def _dot_flops_from_line(line: str, defs: Dict[str, str]) -> float:
     ops = re.search(r"\(([^)]*)\)", line[line.index("(") :])
     contract = 1
     if mc and ops:
-        operand_names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-        lhs = operand_names[0] if operand_names else None
-        lhs_type = defs.get(lhs, "")
+        # Operands are ", "-separated (dims inside [..] have no spaces).
+        # Newer HLO text inlines each operand's type ("f32[96,96]{1,0} %x");
+        # older text has bare names ("%x") that must be looked up in defs.
+        operands = [o.strip() for o in ops.group(1).split(", ") if o.strip()]
+        lhs_type = ""
+        if operands:
+            lhs = operands[0]
+            if "[" in lhs:
+                lhs_type = lhs
+            else:
+                lhs_type = defs.get(lhs.split()[-1].lstrip("%"), "")
         sd_l = shape_dims(lhs_type)
         if sd_l:
             _, ldims = sd_l

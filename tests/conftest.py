@@ -11,10 +11,9 @@ import pytest
 
 @pytest.fixture(scope="session")
 def mesh1():
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.utils.compat import make_mesh
+
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="session")

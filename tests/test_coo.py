@@ -2,6 +2,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.coo import SparseCOO, fold_dense, unfold_dense

@@ -10,6 +10,9 @@ import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
+# Each test compiles a model in an 8-device subprocess: minutes of CPU time.
+pytestmark = pytest.mark.slow
+
 
 def _run(code: str, ndev: int = 8) -> str:
     env = dict(os.environ)
@@ -26,8 +29,8 @@ def _run(code: str, ndev: int = 8) -> str:
 def test_distributed_hooi_matches_single_device():
     got = _run("""
         import jax, numpy as np, jax.numpy as jnp
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         from repro.sparse.generators import low_rank_sparse_tensor
         from repro.core.hooi import hooi_sparse
         from repro.core.distributed import hooi_sparse_distributed
@@ -49,8 +52,8 @@ def test_train_step_shards_on_multi_device():
         from repro.models.sharding import RULES_TRAIN
         from repro.train.step import make_train_step, train_state_specs
         from repro.optim import adamw
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = get_config("yi-6b", smoke=True)
         params = M.init_params(cfg, jax.random.PRNGKey(0))
         pshard = M.param_shardings(cfg, RULES_TRAIN, mesh)
@@ -73,8 +76,8 @@ def test_moe_ep_all_to_all_multi_device():
         from repro.models import model as M
         from repro.models.moe import moe_block
         from repro.models.sharding import DEFAULT_RULES
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = dataclasses.replace(get_config("granite-moe-1b-a400m", smoke=True),
                                   capacity_factor=8.0, dtype="float32")
         params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -83,8 +86,7 @@ def test_moe_ep_all_to_all_multi_device():
         y, aux = jax.jit(lambda x: moe_block(cfg, mesh, DEFAULT_RULES, x,
             p["router"], p["moe_wi"], p["moe_wg"], p["moe_wo"]))(x)
         # single-device reference
-        mesh1 = jax.make_mesh((1, 1), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh1 = make_mesh((1, 1), ("data", "model"))
         y1, _ = moe_block(cfg, mesh1, DEFAULT_RULES, x,
             p["router"], p["moe_wi"], p["moe_wg"], p["moe_wo"])
         print(float(np.abs(np.asarray(y) - np.asarray(y1)).max()))
@@ -105,8 +107,8 @@ def test_checkpoint_elastic_reshard_across_meshes():
         mgr = CheckpointManager(d)
         mgr.save(3, params)
         # restore onto a (4,2) mesh with full shardings
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         shard = M.param_shardings(cfg, RULES_TRAIN, mesh)
         restored, step, _ = mgr.restore(params, shardings=shard)
         ok = all(np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))

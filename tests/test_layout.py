@@ -1,0 +1,108 @@
+"""Property tests for the sparse invariants (hypothesis; optional dev dep).
+
+The layout transforms (``sort_by_mode``, ``pad_to``, ``build_mode_layout``)
+and the linearized unfolding index must all be *value-preserving*: whatever
+permutation/padding the schedule applies, ``to_dense()`` — and therefore
+every contraction — is unchanged. And the sparse TTM chain must equal the
+dense ``ttm_chain`` oracle on arbitrary COO tensors, duplicates included.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coo import SparseCOO, unfold_dense
+from repro.core.kron import sparse_ttm_chain
+from repro.core.ttm import ttm_chain
+from repro.sparse.layout import build_mode_layout
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+@st.composite
+def coo_tensors(draw, max_ndim=3, max_side=6, max_nnz=20):
+    ndim = draw(st.integers(2, max_ndim))
+    shape = tuple(draw(st.integers(1, max_side)) for _ in range(ndim))
+    nnz = draw(st.integers(0, max_nnz))
+    idx = np.array(
+        [[draw(st.integers(0, s - 1)) for s in shape] for _ in range(nnz)],
+        dtype=np.int32,
+    ).reshape(nnz, ndim)
+    vals = np.array(
+        [draw(st.floats(-4, 4, allow_nan=False, width=32)) for _ in range(nnz)],
+        dtype=np.float32,
+    )
+    return SparseCOO.from_parts(idx, vals, shape)
+
+
+@SETTINGS
+@given(coo=coo_tensors(), data=st.data())
+def test_sort_by_mode_preserves_dense(coo, data):
+    mode = data.draw(st.integers(0, coo.ndim - 1))
+    want = np.asarray(coo.to_dense())
+    got = np.asarray(coo.sort_by_mode(mode).to_dense())
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@SETTINGS
+@given(coo=coo_tensors(), extra=st.integers(0, 17))
+def test_pad_to_preserves_dense(coo, extra):
+    want = np.asarray(coo.to_dense())
+    got = np.asarray(coo.pad_to(coo.nnz + extra).to_dense())
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@SETTINGS
+@given(coo=coo_tensors(), data=st.data())
+def test_linearized_index_matches_unfolding(coo, data):
+    """Scattering values at (i_mode, linearized col) rebuilds unfold(dense)."""
+    mode = data.draw(st.integers(0, coo.ndim - 1))
+    col = coo.linearized_index(mode)
+    rest = int(np.prod([s for t, s in enumerate(coo.shape) if t != mode]))
+    mat = np.zeros((coo.shape[mode], rest), dtype=np.float32)
+    np.add.at(mat, (np.asarray(coo.indices)[:, mode], col), np.asarray(coo.values))
+    want = np.asarray(unfold_dense(coo.to_dense(), mode))
+    np.testing.assert_allclose(mat, want, rtol=1e-6, atol=1e-6)
+
+
+@SETTINGS
+@given(coo=coo_tensors(), data=st.data(), bn=st.sampled_from([4, 8, 32]),
+       bi=st.sampled_from([4, 16]))
+def test_mode_layout_streams_each_nonzero_once(coo, data, bn, bi):
+    """The engine schedule is a permutation + padding: replaying it through a
+    plain scatter reproduces to_dense()'s mode unfolding of the values."""
+    mode = data.draw(st.integers(0, coo.ndim - 1))
+    layout = build_mode_layout(coo, mode, bn=bn, bi=bi)
+    real = layout.order[layout.valid > 0]
+    assert sorted(real.tolist()) == list(range(coo.nnz))
+    # replay: padded slots carry valid=0 so they add nothing
+    rows_global = layout.blkmap.repeat(bn) * bi + layout.rel_row
+    vals_src = np.asarray(coo.values)
+    vals = (
+        vals_src[layout.order] if coo.nnz else np.zeros(layout.order.shape, np.float32)
+    ) * layout.valid
+    acc = np.zeros((layout.n_row_blocks * bi,), dtype=np.float32)
+    np.add.at(acc, rows_global, vals)
+    want = np.zeros_like(acc)
+    np.add.at(want, np.asarray(coo.indices)[:, mode], np.asarray(coo.values))
+    np.testing.assert_allclose(acc, want, rtol=1e-6, atol=1e-6)
+
+
+@SETTINGS
+@given(coo=coo_tensors(), data=st.data(), seed=st.integers(0, 2**31 - 1))
+def test_sparse_ttm_chain_matches_dense_oracle(coo, data, seed):
+    mode = data.draw(st.integers(0, coo.ndim - 1))
+    rng = np.random.default_rng(seed)
+    ranks = [min(3, s) for s in coo.shape]
+    factors = [
+        jnp.asarray(rng.standard_normal((s, r)).astype(np.float32))
+        for s, r in zip(coo.shape, ranks)
+    ]
+    got = np.asarray(sparse_ttm_chain(coo, factors, mode))
+    want = np.asarray(
+        unfold_dense(ttm_chain(coo.to_dense(), factors, skip=mode, transpose=True), mode)
+    )
+    scale = np.abs(want).max() + 1e-6
+    np.testing.assert_allclose(got / scale, want / scale, rtol=1e-5, atol=1e-5)

@@ -10,6 +10,9 @@ from repro.models import model as M
 
 ARCHS = ASSIGNED_ARCHS
 
+# ~100 s of per-arch compiles: deselect locally with `-m "not slow"`.
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, b=2, s=32, key=0):
     ks = jax.random.split(jax.random.PRNGKey(key), 3)
@@ -59,7 +62,15 @@ def test_smoke_train_step(arch, mesh1, rules):
 @pytest.mark.parametrize("arch", ["yi-6b", "qwen2-7b", "granite-moe-1b-a400m",
                                   "mamba2-1.3b", "zamba2-2.7b"])
 def test_decode_matches_full_forward(arch, mesh1, rules):
+    import dataclasses
+
     cfg = get_config(arch, smoke=True)
+    if cfg.n_experts:
+        # ample expert capacity: the train path intentionally drops tokens at
+        # the default capacity factor (GShard semantics), which makes
+        # "decode == full forward" ill-defined for whichever position got
+        # dropped. With no drops the comparison is exact.
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     B, S = 2, 32
     toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0, cfg.vocab_size)
