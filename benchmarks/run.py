@@ -17,8 +17,16 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
-        fig6_sparsity, table2_accuracy, table3_ttm, table4_kron, table5_realworld,
+        fig6_sparsity, sweep_bench, table2_accuracy, table3_ttm, table4_kron,
+        table5_realworld,
     )
+
+    def sweep_section():
+        # end-to-end sweep-pipeline perf trajectory (smoke grid here; the full
+        # grid is `python benchmarks/sweep_bench.py`). Nonzero = retrace or
+        # pipeline-parity regression.
+        if sweep_bench.main(["--smoke"]):
+            raise RuntimeError("sweep_bench reported a regression")
 
     sections = {
         "table2": table2_accuracy.main,
@@ -26,6 +34,7 @@ def main() -> None:
         "table4": table4_kron.main,
         "fig6": fig6_sparsity.main,
         "table5": table5_realworld.main,
+        "sweep": sweep_section,
     }
     if args.only:
         keep = set(args.only.split(","))

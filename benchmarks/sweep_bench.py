@@ -1,0 +1,207 @@
+"""End-to-end ``hooi_sparse`` sweep-pipeline benchmark -> BENCH_sweep.json.
+
+Times the legacy per-sweep Python driver (``pipeline="python"``: one XLA
+dispatch + one blocking host sync per sweep) against the compiled
+scan-over-sweeps pipeline (``pipeline="scan"``: the whole multi-sweep loop is
+one XLA program, fit history crosses device->host once per call), across
+
+    engines  x  QRP methods  x  {synthetic, dataset-like} shapes,
+
+and records the perf trajectory every future PR is measured against:
+
+  BENCH_sweep.json = {
+    "benchmark": "sweep_bench", "smoke": bool, "jax": .., "backend": ..,
+    "cases": [{
+       "shape", "density", "nnz", "ranks", "engine", "method", "n_iter",
+       "python_s", "python_iqr_s",   # legacy driver median wall-clock (s)
+       "scan_s",   "scan_iqr_s",     # compiled pipeline median wall-clock (s)
+       "speedup",                    # python_s / scan_s  (>1 => scan faster)
+       "dispatches_per_call": {"python": n_iter, "scan": 1},
+       "retraces_during_timing",     # MUST be 0 (jit cache hit every call)
+       "fit_maxdiff",                # |python fit history - scan fit history|
+    }, ...]
+  }
+
+Retrace regression gate (CI runs ``--smoke``): after warmup, every timed call
+must hit the compiled-sweep jit cache. Any retrace during timing — e.g. a
+schedule pytree or static argument churning per call — exits nonzero.
+
+    PYTHONPATH=src:. python benchmarks/sweep_bench.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Optional
+
+import numpy as np
+
+
+def bench_case(
+    shape,
+    density: float,
+    ranks,
+    engine: str,
+    method: str,
+    n_iter: int,
+    warmup: int,
+    iters: int,
+    label: str = "",
+) -> dict:
+    from repro.core import hooi
+    from repro.core.engine import make_engine
+    from repro.sparse.generators import random_sparse_tensor
+
+    coo = random_sparse_tensor(shape, density, seed=0)
+    # one engine per pipeline: schedules build once and stay device-resident,
+    # so the timed region is the sweep loop, not host-side plan construction.
+    engines = {p: make_engine(engine) for p in ("python", "scan")}
+
+    def run(pipeline):
+        return hooi.hooi_sparse(
+            coo, ranks, n_iter=n_iter, method=method,
+            engine=engines[pipeline], pipeline=pipeline,
+        )
+
+    import jax
+
+    def timed(pipeline):
+        t0 = time.perf_counter()
+        out = run(pipeline)
+        jax.block_until_ready(out.core)
+        return time.perf_counter() - t0, out
+
+    for _ in range(max(1, warmup)):  # warm: build schedules + compile
+        for pipeline in ("python", "scan"):
+            timed(pipeline)
+    traces_before = sum(hooi.SWEEP_TRACE_COUNTS.values())
+    # paired reps — python and scan interleave so host load drift (shared CI
+    # runners) biases both pipelines equally instead of whichever ran second.
+    samples = {"python": [], "scan": []}
+    results = {}
+    for _ in range(iters):
+        for pipeline in ("python", "scan"):
+            dt, results[pipeline] = timed(pipeline)
+            samples[pipeline].append(dt)
+    timings = {
+        p: (float(np.median(s)),
+            float(np.percentile(s, 75) - np.percentile(s, 25)))
+        for p, s in samples.items()
+    }
+    retraces = sum(hooi.SWEEP_TRACE_COUNTS.values()) - traces_before
+    fit_maxdiff = float(
+        np.abs(results["python"].fit_history - results["scan"].fit_history).max()
+    )
+    case = {
+        "label": label or f"{'x'.join(map(str, shape))}@{density:g}",
+        "shape": list(shape),
+        "density": density,
+        "nnz": coo.nnz,
+        "ranks": list(ranks),
+        "engine": engine,
+        "method": method,
+        "n_iter": n_iter,
+        "python_s": timings["python"][0],
+        "python_iqr_s": timings["python"][1],
+        "scan_s": timings["scan"][0],
+        "scan_iqr_s": timings["scan"][1],
+        "speedup": timings["python"][0] / max(timings["scan"][0], 1e-12),
+        "dispatches_per_call": {"python": n_iter, "scan": 1},
+        "retraces_during_timing": int(retraces),
+        "fit_maxdiff": fit_maxdiff,
+    }
+    return case
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few iters (CI gate)")
+    ap.add_argument("--out", default="BENCH_sweep.json")
+    ap.add_argument("--engine", default="both",
+                    choices=("xla", "pallas", "both"))
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.core.engine import available_engines
+
+    engines = available_engines() if args.engine == "both" else [args.engine]
+
+    if args.smoke:
+        grid = [
+            # (label, shape, density, ranks, n_iter, methods)
+            ("synthetic-small", (30, 24, 18), 0.03, (4, 3, 2), 5,
+             ("householder", "gram")),
+            ("nell2-like-small", (120, 120, 120), 2.4e-4, (4, 4, 4), 5,
+             ("gram",)),
+        ]
+        warmup, iters = 1, 3
+    else:
+        grid = [
+            ("synthetic-medium", (60, 50, 40), 0.02, (6, 5, 4), 5,
+             ("householder", "gram")),
+            ("synthetic-paper-200", (200, 200, 200), 1e-3, (8, 8, 8), 5,
+             ("gram",)),
+            ("nell2-like", (400, 400, 400), 2.4e-5, (8, 8, 8), 8, ("gram",)),
+        ]
+        # xla calls are ~ms: many reps for a stable median on shared runners.
+        warmup, iters = 3, 15
+
+    cases = []
+    for label, shape, density, ranks, n_iter, methods in grid:
+        for engine in engines:
+            for method in methods:
+                t0 = time.time()
+                # the legacy pallas driver runs interpret-mode kernels eagerly
+                # (seconds per call on CPU); fewer reps keep the run bounded.
+                w, it = (1, 3) if engine == "pallas" else (warmup, iters)
+                case = bench_case(
+                    shape, density, ranks, engine, method, n_iter,
+                    warmup=w, iters=it, label=label,
+                )
+                cases.append(case)
+                print(
+                    f"{label:22s} {engine:6s} {method:11s} "
+                    f"python={case['python_s']*1e3:9.2f}ms "
+                    f"scan={case['scan_s']*1e3:9.2f}ms "
+                    f"speedup={case['speedup']:5.2f}x "
+                    f"retraces={case['retraces_during_timing']} "
+                    f"({time.time()-t0:.1f}s)",
+                    flush=True,
+                )
+
+    payload = {
+        "benchmark": "sweep_bench",
+        "smoke": bool(args.smoke),
+        "created_unix": int(time.time()),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "cases": cases,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(cases)} cases)")
+
+    bad_retrace = [c for c in cases if c["retraces_during_timing"] != 0]
+    if bad_retrace:
+        print("RETRACE REGRESSION: timed calls recompiled the sweep pipeline:")
+        for c in bad_retrace:
+            print(f"  {c['label']} {c['engine']}/{c['method']}: "
+                  f"{c['retraces_during_timing']} retraces")
+        return 1
+    bad_parity = [c for c in cases if not np.isfinite(c["fit_maxdiff"])
+                  or c["fit_maxdiff"] > 1e-4]
+    if bad_parity:
+        print("FIT PARITY REGRESSION: scan and python pipelines diverged:")
+        for c in bad_parity:
+            print(f"  {c['label']} {c['engine']}/{c['method']}: "
+                  f"maxdiff={c['fit_maxdiff']:.2e}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,8 +24,9 @@ from repro.core.kron import (
     precompute_kron_reuse,
     sparse_ttm_chain,
     sparse_ttm_chain_reuse,
+    sparse_ttm_chain_reuse_device,
 )
-from repro.core.qrp import qrp, qrp_gram, qrp_householder, svd_factor
+from repro.core.qrp import factor_update, qrp, qrp_gram, qrp_householder, svd_factor
 from repro.core.reconstruct import (
     compression_ratio,
     reconstruct_at,

@@ -23,12 +23,19 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
+import weakref
 from typing import Dict, List, Optional, Sequence
 
 import jax
 
 from repro.core.coo import SparseCOO
-from repro.sparse.layout import KronReusePlan, SortedCOO, build_kron_reuse, build_mode_layout
+from repro.sparse.layout import (
+    DeviceSchedule,
+    KronReusePlan,
+    SortedCOO,
+    build_kron_reuse,
+    build_mode_layout,
+)
 
 ENGINES = ("xla", "pallas", "auto")
 
@@ -84,9 +91,14 @@ class SweepEngine:
     interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
     layouts: Dict[int, SortedCOO] = dataclasses.field(default_factory=dict)
     kron_plans: Dict[int, KronReusePlan] = dataclasses.field(default_factory=dict)
-    # the indices array the cached schedules were built from; holding the
-    # reference keeps the identity check below sound (no id reuse).
-    _bound_indices: Optional[jax.Array] = None
+    dev_schedules: Dict[int, Optional[DeviceSchedule]] = dataclasses.field(
+        default_factory=dict
+    )
+    # weakref to the indices array the cached schedules were built from: a
+    # live referent makes the identity check below sound (no id reuse) without
+    # pinning a rebound-away tensor (and its device buffer) in memory. A dead
+    # ref simply forces a rebuild.
+    _bound_indices: Optional["weakref.ref"] = None
     _bound_shape: Optional[tuple] = None
 
     # -- schedule caches --------------------------------------------------
@@ -94,10 +106,22 @@ class SweepEngine:
         """Invalidate cached schedules when handed a different tensor —
         replaying one tensor's order/valid/rel_row against another's indices
         would be silently wrong, not an error."""
-        if self._bound_indices is not coo.indices or self._bound_shape != coo.shape:
+        bound = self._bound_indices() if self._bound_indices is not None else None
+        if bound is not coo.indices or self._bound_shape != coo.shape:
             self.layouts.clear()
             self.kron_plans.clear()
-            self._bound_indices = coo.indices
+            self.dev_schedules.clear()
+
+            # when the bound tensor dies, drop its derived schedules too —
+            # they are O(nnz) host+device memory of the same magnitude as the
+            # tensor. The callback closes over the dicts, not the engine, so
+            # it cannot extend the engine's lifetime.
+            def _release(_ref, caches=(self.layouts, self.kron_plans,
+                                       self.dev_schedules)):
+                for c in caches:
+                    c.clear()
+
+            self._bound_indices = weakref.ref(coo.indices, _release)
             self._bound_shape = tuple(coo.shape)
 
     def mode_layout(self, coo: SparseCOO, mode: int) -> SortedCOO:
@@ -111,6 +135,32 @@ class SweepEngine:
         if mode not in self.kron_plans:
             self.kron_plans[mode] = build_kron_reuse(coo, mode)
         return self.kron_plans[mode]
+
+    def device_schedule(self, coo: SparseCOO, mode: int) -> Optional[DeviceSchedule]:
+        """The mode's schedule with arrays committed to device exactly once —
+        what the compiled scan-over-sweeps pipeline (``core.hooi``) closes
+        over. ``None`` for the plain-XLA path, which needs no schedule at all
+        (and must not force a host round-trip through ``coo.indices``)."""
+        self._bind(coo)
+        if mode not in self.dev_schedules:
+            if self.name == "pallas":
+                self.dev_schedules[mode] = DeviceSchedule.from_layout(
+                    self.mode_layout(coo, mode)
+                )
+            elif self.use_kron_reuse:
+                self.dev_schedules[mode] = DeviceSchedule.from_kron_plan(
+                    self.kron_plan(coo, mode), mode, tuple(coo.shape)
+                )
+            else:
+                self.dev_schedules[mode] = None
+        return self.dev_schedules[mode]
+
+    def resolved_interpret(self) -> bool:
+        """The kernel interpret flag this engine will actually run with
+        (resolved to a bool so it can be a static jit argument)."""
+        from repro.kernels.ops import default_interpret
+
+        return default_interpret() if self.interpret is None else self.interpret
 
     # -- Alg. 2 line 5: Y_(n) over nonzeros only --------------------------
     def mode_unfolding(
@@ -131,12 +181,16 @@ class SweepEngine:
     ) -> jax.Array:
         from repro.kernels import ops
 
-        return ops.sparse_ttm_chain_kernel(
-            coo,
+        # device-resident schedule: uploaded once per (tensor, mode), so
+        # per-sweep calls hand the kernels device buffers, not numpy.
+        return ops.sparse_ttm_chain_device(
+            coo.indices,
+            coo.values,
             factors,
             mode,
-            plan=self.mode_layout(coo, mode) if coo.nnz else None,
-            interpret=self.interpret,
+            self.device_schedule(coo, mode),
+            shape=tuple(coo.shape),
+            interpret=self.resolved_interpret(),
         )
 
     # -- Alg. 2 line 9: core from the last unfolding (module 1) -----------

@@ -13,9 +13,10 @@ the relative reconstruction error is computed without ever densifying X.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from functools import partial
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +28,31 @@ from repro.core.kron import (
     KronReusePlan,
     sparse_ttm_chain,
     sparse_ttm_chain_reuse,
+    sparse_ttm_chain_reuse_device,
 )
-from repro.core.qrp import qrp, svd_factor
+from repro.core.qrp import factor_update
 from repro.core.ttm import ttm_chain, ttm_unfolded
+
+PIPELINES = ("scan", "python")
+
+# -- instrumentation ---------------------------------------------------------
+# SWEEP_TRACE_COUNTS ticks once per *trace* of the compiled sweep pipeline
+# (inside the traced body, so cache hits don't count) — the no-retrace
+# regression test and benchmarks/sweep_bench.py read it. SWEEP_DISPATCH_COUNTS
+# ticks once per top-level XLA dispatch the sparse driver issues: the scan
+# pipeline is exactly 1 per hooi_sparse call, the legacy python pipeline is 1
+# per sweep.
+SWEEP_TRACE_COUNTS: collections.Counter = collections.Counter()
+SWEEP_DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
+# the single device->host transfer of the scan pipeline (fit history); a
+# module-level seam so tests can count that it really happens exactly once.
+_fetch_history = jax.device_get
+
+# scan-pipeline sentinel for "this sweep never ran" (tol early-exit). A real
+# relative error is always >= 0 (or NaN on degenerate input, which must also
+# count as a ran sweep), so -1 is unambiguous.
+_SKIPPED = -1.0
 
 
 @dataclasses.dataclass
@@ -39,12 +62,6 @@ class HooiResult:
     rel_error: jax.Array  # ||X - Xhat||_F / ||X||_F
     fit_history: np.ndarray  # per-sweep relative error
     engine: str = "xla"  # resolved sweep engine ("xla" for the dense driver)
-
-
-def _factor_update(y_n: jax.Array, r: int, method: str) -> jax.Array:
-    if method == "svd":
-        return svd_factor(y_n, r)
-    return qrp(y_n, r, method=method)
 
 
 def init_factors(
@@ -93,7 +110,7 @@ def hooi_dense(
         for mode in range(n):
             y = ttm_chain(x, factors, skip=mode, transpose=True)
             y_n = unfold_dense(y, mode)
-            factors[mode] = _factor_update(y_n, ranks[mode], method)
+            factors[mode] = factor_update(y_n, ranks[mode], method)
         # core from the last power iterate: G = Y x_N U_N^T (Eq. 10).
         g_n = factors[n - 1].T @ unfold_dense(y, n - 1)
         core_shape = list(ranks)
@@ -156,7 +173,7 @@ def sparse_sweep(
                 y_n = sparse_ttm_chain_reuse(coo, factors, mode, plan)
             else:
                 y_n = sparse_ttm_chain(coo, factors, mode)
-        factors[mode] = _factor_update(y_n, ranks[mode], method)
+        factors[mode] = factor_update(y_n, ranks[mode], method)
     # Alg. 2 line 9: G <- Y x_N U_N^T on the (dense, small) last unfolding.
     # y_n is Y_(N): (I_N, R_1*...*R_{N-1}); the TTM module computes
     # G_(N) = U_N^T Y_(N)  — this is the paper's FPGA TTM (Eq. 12).
@@ -175,6 +192,104 @@ def _jitted_sweep(indices, values, factors, *, shape, ranks, method):
     return tuple(fs), core
 
 
+# ---------------------------------------------------------------------------
+# Compiled scan-over-sweeps pipeline: the entire multi-sweep HOOI loop is ONE
+# XLA program per (engine, shape, ranks, method, n_iter). Schedules arrive as
+# device-resident pytrees (sparse.layout.DeviceSchedule), factor/core buffers
+# are donated, the ``tol`` early-exit is a cond-masked scan, and the fit
+# history crosses device->host exactly once per hooi_sparse call.
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "shape", "ranks", "method", "n_iter", "engine_name", "interpret",
+        "use_reuse",
+    ),
+    donate_argnames=("factors",),
+)
+def _scan_sweeps(
+    indices,
+    values,
+    factors,
+    xnorm2,
+    tol,
+    scheds,
+    *,
+    shape,
+    ranks,
+    method,
+    n_iter,
+    engine_name,
+    interpret,
+    use_reuse,
+):
+    # trace-time only: cache hits never reach this line.
+    SWEEP_TRACE_COUNTS[(engine_name, shape, tuple(ranks), method, n_iter)] += 1
+    n = len(shape)
+    init_dtypes = tuple(f.dtype for f in factors)
+
+    def mode_unfolding(fs, mode):
+        if engine_name == "pallas":
+            from repro.kernels import ops
+
+            return ops.sparse_ttm_chain_device(
+                indices, values, fs, mode, scheds[mode],
+                shape=shape, interpret=interpret,
+            )
+        if use_reuse:
+            return sparse_ttm_chain_reuse_device(
+                indices, values, fs, mode, scheds[mode], shape=shape
+            )
+        return sparse_ttm_chain(SparseCOO(indices, values, shape), fs, mode)
+
+    def core_unfolding(y_n, u_last):
+        if engine_name == "pallas":
+            from repro.kernels import ops
+
+            return ops.ttm(y_n.T, u_last.T, interpret=interpret).T
+        return ttm_unfolded(y_n.T, u_last.T).T
+
+    def run_sweep(carry):
+        fs, _, prev_err, done = carry
+        fs = list(fs)
+        y_n = None
+        for mode in range(n):
+            y_n = mode_unfolding(fs, mode)
+            # pin each factor to its init dtype so the scan carry is a
+            # fixpoint even when a kernel path emits a different precision.
+            fs[mode] = factor_update(y_n, ranks[mode], method).astype(
+                init_dtypes[mode]
+            )
+        g_n = core_unfolding(y_n, fs[n - 1])
+        core = fold_dense(g_n, n - 1, list(ranks)).astype(jnp.float32)
+        err = (
+            jnp.sqrt(jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0))
+            / jnp.sqrt(xnorm2)
+        ).astype(jnp.float32)
+        # same rule as the legacy loop: stop once two consecutive sweeps agree
+        # to within tol (never on the first sweep — prev_err starts at +inf).
+        done = (tol > 0) & jnp.isfinite(prev_err) & (jnp.abs(prev_err - err) < tol)
+        return tuple(fs), core, err, done
+
+    def body(carry, _):
+        already_done = carry[3]
+        carry = jax.lax.cond(already_done, lambda c: c, run_sweep, carry)
+        # sweeps skipped by the early-exit emit the sentinel, not an error.
+        emitted = jnp.where(already_done, jnp.float32(_SKIPPED), carry[2])
+        return carry, emitted
+
+    carry0 = (
+        tuple(factors),
+        jnp.zeros(tuple(ranks), dtype=jnp.float32),
+        jnp.float32(jnp.inf),
+        jnp.asarray(False),
+    )
+    (fs, core, _, _), hist = jax.lax.scan(body, carry0, None, length=n_iter)
+    return fs, core, hist
+
+
 def hooi_sparse(
     coo: SparseCOO,
     ranks: Sequence[int],
@@ -183,7 +298,8 @@ def hooi_sparse(
     key: Optional[jax.Array] = None,
     tol: float = 0.0,
     use_kron_reuse: bool = False,
-    engine: str = "auto",
+    engine: Union[str, SweepEngine] = "auto",
+    pipeline: str = "scan",
 ) -> HooiResult:
     """The paper's sparse Tucker decomposition (Alg. 2).
 
@@ -196,20 +312,76 @@ def hooi_sparse(
         on the XLA engine (the Pallas schedule has its own reuse layout).
       engine: 'xla', 'pallas' or 'auto' — how the sweep's hot loops execute
         (see ``core.engine``). 'auto' picks pallas on TPU, xla elsewhere;
-        'pallas' without a usable Pallas install warns and falls back.
+        'pallas' without a usable Pallas install warns and falls back. A
+        prebuilt :class:`~repro.core.engine.SweepEngine` is also accepted and
+        reuses its cached (device-resident) schedules across calls.
+      pipeline: 'scan' (default) compiles the whole multi-sweep loop into a
+        single XLA program — ``lax.scan`` over sweeps, donated factor/core
+        buffers, a jittable ``tol`` early-exit, and exactly one device->host
+        transfer (the fit history) per call. 'python' is the legacy
+        one-dispatch-plus-one-host-sync-per-sweep driver, kept as the
+        benchmark baseline (``benchmarks/sweep_bench.py``).
     """
+    if pipeline not in PIPELINES:
+        raise ValueError(f"pipeline must be one of {PIPELINES}, got {pipeline!r}")
+    if n_iter < 1:
+        raise ValueError(f"n_iter must be >= 1, got {n_iter}")
     key = key if key is not None else jax.random.PRNGKey(0)
     ranks = effective_ranks(coo.shape, ranks)
+    if isinstance(engine, SweepEngine):
+        eng: Optional[SweepEngine] = engine
+        engine_name = engine.name
+        if use_kron_reuse and not engine.use_kron_reuse:
+            import warnings
+
+            warnings.warn(
+                "use_kron_reuse=True is ignored: the prebuilt SweepEngine was "
+                "made with use_kron_reuse=False (pass make_engine(..., "
+                "use_kron_reuse=True) instead).",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+    else:
+        eng = None
+        engine_name = resolve_engine(engine)
     factors = init_factors(coo.shape, ranks, key)
-    engine_name = resolve_engine(engine)
-    eng: Optional[SweepEngine] = None
-    if engine_name == "pallas" or use_kron_reuse:
-        eng = make_engine(engine_name, use_kron_reuse=use_kron_reuse)
     xnorm2 = jnp.square(coo.norm())
+
+    if pipeline == "scan":
+        if eng is None:
+            eng = make_engine(engine_name, use_kron_reuse=use_kron_reuse)
+        use_reuse = eng.use_kron_reuse and eng.name == "xla"
+        scheds = tuple(eng.device_schedule(coo, m) for m in range(coo.ndim))
+        fs, core, hist_dev = _scan_sweeps(
+            coo.indices,
+            coo.values,
+            tuple(factors),
+            xnorm2,
+            jnp.float32(tol),
+            scheds,
+            shape=tuple(coo.shape),
+            ranks=tuple(ranks),
+            method=method,
+            n_iter=int(n_iter),
+            engine_name=eng.name,
+            interpret=eng.resolved_interpret() if eng.name == "pallas" else False,
+            use_reuse=use_reuse,
+        )
+        SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
+        hist = np.asarray(_fetch_history(hist_dev))  # the one d2h transfer
+        n_done = int(np.sum(hist != _SKIPPED))
+        hist = hist[:n_done]
+        return HooiResult(
+            core, list(fs), jnp.asarray(hist[-1]), hist, engine=eng.name
+        )
+
+    # -- legacy per-sweep python driver (pipeline="python") ----------------
+    if eng is None and (engine_name == "pallas" or use_kron_reuse):
+        eng = make_engine(engine_name, use_kron_reuse=use_kron_reuse)
     hist = []
     core = None
     for _ in range(n_iter):
-        if eng is None:
+        if eng is None or (eng.name == "xla" and not eng.use_kron_reuse):
             fs, core = _jitted_sweep(
                 coo.indices, coo.values, tuple(factors),
                 shape=coo.shape, ranks=tuple(ranks), method=method,
@@ -217,10 +389,11 @@ def hooi_sparse(
             factors = list(fs)
         else:
             factors, core = sparse_sweep(coo, factors, ranks, method, engine=eng)
+        SWEEP_DISPATCH_COUNTS[(engine_name, "python")] += 1
         err = jnp.sqrt(jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)) / jnp.sqrt(
             xnorm2
         )
-        hist.append(float(err))
+        hist.append(float(err))  # blocking host sync — one per sweep
         if tol and len(hist) > 1 and abs(hist[-2] - hist[-1]) < tol:
             break
     return HooiResult(

@@ -107,6 +107,32 @@ def precompute_kron_reuse(coo: SparseCOO, skip_mode: int) -> KronReusePlan:
     return build_kron_reuse(coo, skip_mode)
 
 
+def _reuse_chain(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: Sequence[jax.Array],
+    skip_mode: int,
+    unique_indices,
+    inverse,
+    modes: Sequence[int],
+    shape: Sequence[int],
+) -> jax.Array:
+    """Shared body of the Kron-reuse chain: compute each unique Kronecker row
+    once, gather per-nonzero, scatter-add into Y_(n). The dedup arrays index
+    identically whether host numpy (KronReusePlan) or device-resident
+    (DeviceSchedule) — the single implementation behind both entry points."""
+    if indices.shape[0] == 0:
+        return zero_unfolding(tuple(shape), factors, skip_mode)
+    rows = [factors[t][unique_indices[:, c]] for c, t in enumerate(modes)]
+    k_unique = kron_rows(rows)  # (n_unique, K)
+    k = k_unique[inverse]  # (nnz, K)
+    dt = jnp.promote_types(jnp.promote_types(values.dtype, k.dtype), jnp.float32)
+    contrib = k.astype(dt) * values.astype(dt)[:, None]
+    i_n = indices[:, skip_mode]
+    out = jnp.zeros((shape[skip_mode], k.shape[1]), dtype=dt)
+    return out.at[i_n].add(contrib)
+
+
 def sparse_ttm_chain_reuse(
     coo: SparseCOO,
     factors: Sequence[jax.Array],
@@ -117,19 +143,31 @@ def sparse_ttm_chain_reuse(
     once and gathering per-nonzero (paper's reuse optimization). Exact same
     result; fewer multiplies when nonzeros share non-mode index tuples.
     """
-    if coo.indices.shape[0] == 0:
-        return zero_unfolding(coo.shape, factors, skip_mode)
-    rows = [
-        factors[t][jnp.asarray(plan.unique_indices[:, c])]
-        for c, t in enumerate(plan.modes)
-    ]
-    k_unique = kron_rows(rows)  # (n_unique, K)
-    k = k_unique[jnp.asarray(plan.inverse)]  # (nnz, K)
-    dt = jnp.promote_types(jnp.promote_types(coo.values.dtype, k.dtype), jnp.float32)
-    contrib = k.astype(dt) * coo.values.astype(dt)[:, None]
-    i_n = coo.indices[:, skip_mode]
-    out = jnp.zeros((coo.shape[skip_mode], k.shape[1]), dtype=dt)
-    return out.at[i_n].add(contrib)
+    return _reuse_chain(
+        coo.indices, coo.values, factors, skip_mode,
+        jnp.asarray(plan.unique_indices), jnp.asarray(plan.inverse),
+        plan.modes, coo.shape,
+    )
+
+
+def sparse_ttm_chain_reuse_device(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: Sequence[jax.Array],
+    skip_mode: int,
+    sched,
+    *,
+    shape: Sequence[int],
+) -> jax.Array:
+    """As :func:`sparse_ttm_chain_reuse` but with the dedup plan already
+    device-resident (``sched.kron_unique`` / ``sched.kron_inverse`` on a
+    ``sparse.layout.DeviceSchedule``): no host constants enter the trace, so
+    the compiled scan-over-sweeps pipeline can call it every sweep without
+    re-uploading the plan."""
+    return _reuse_chain(
+        indices, values, factors, skip_mode,
+        sched.kron_unique, sched.kron_inverse, sched.kron_modes, shape,
+    )
 
 
 def kron_flops(coo: SparseCOO, ranks: Sequence[int], skip_mode: int) -> int:

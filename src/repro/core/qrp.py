@@ -194,6 +194,17 @@ def svd_factor(a: jax.Array, r: int) -> jax.Array:
     return u[:, :r]
 
 
+def factor_update(y_n: jax.Array, r: int, method: str) -> jax.Array:
+    """HOOI factor update U_n <- orth(Y_(n), R_n) — Alg. 1 line 5 ('svd') or
+    Alg. 2 line 7 ('householder' / 'gram'). Every method is pure ``lax``
+    (``fori_loop`` chains, no data-dependent Python), which is what lets the
+    whole-sweep pipeline in ``core.hooi`` run N of these inside one compiled
+    ``lax.scan`` over sweeps."""
+    if method == "svd":
+        return svd_factor(y_n, r)
+    return qrp(y_n, r, method=method)
+
+
 def qrp_flops(m: int, n: int) -> int:
     """Paper's QRP flop model: 2mn^2 - 2n^3/3."""
     return int(2 * m * n * n - 2 * n**3 // 3)

@@ -23,7 +23,7 @@ TPU-native kernels:
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -117,6 +117,9 @@ class ScatterPlan(NamedTuple):
     n_row_blocks: int
     bn: int
     bi: int
+    # precomputed keep-mask over output rows (None = all row blocks visited);
+    # cached here so the scatter wrappers do no host work per call.
+    row_mask: Optional[np.ndarray] = None
 
 
 def build_scatter_plan(
@@ -124,7 +127,7 @@ def build_scatter_plan(
 ) -> ScatterPlan:
     """Thin wrapper over the shared grouping in ``sparse.layout`` (one
     implementation of the pad/group/order construction for both plan types)."""
-    from repro.sparse.layout import build_schedule
+    from repro.sparse.layout import build_schedule, visited_row_mask
 
     order, valid, rel, blkmap, first, n_row_blocks, _ = build_schedule(
         rows, n_rows, bn, bi
@@ -138,6 +141,7 @@ def build_scatter_plan(
         n_row_blocks=n_row_blocks,
         bn=bn,
         bi=bi,
+        row_mask=visited_row_mask(blkmap, n_row_blocks, bi, n_rows),
     )
 
 
@@ -205,12 +209,14 @@ def scatter_rows_pallas(
 
 def _mask_unvisited(out: jax.Array, plan, n_rows: int) -> jax.Array:
     """Row blocks with zero nonzeros are never visited by the grid -> their
-    rows may be uninitialized in interpret mode; mask them explicitly."""
-    visited = np.zeros((plan.n_row_blocks,), dtype=bool)
-    visited[np.asarray(plan.blkmap)] = True
-    if visited.all():
+    rows may be uninitialized in interpret mode; mask them explicitly. The
+    mask is precomputed at plan-build time (``plan.row_mask``; ``None`` means
+    every row block is visited), so this is trace-safe — device-resident
+    plans (``sparse.layout.DeviceSchedule``) flow through jit/scan with no
+    host work per call."""
+    mask = plan.row_mask
+    if mask is None:
         return out
-    mask = np.repeat(visited, plan.bi)[:n_rows]
     return jnp.where(jnp.asarray(mask)[:, None], out, 0.0)
 
 

@@ -65,31 +65,55 @@ def sparse_ttm_chain_kernel(
     via ``core.engine.SweepEngine``.
     """
     interp = default_interpret() if interpret is None else interpret
-    n = coo.ndim
-    n_rows = coo.shape[skip_mode]
-    if coo.nnz == 0:
+    if coo.nnz and plan is None:
+        plan = build_scatter_plan(
+            np.asarray(coo.indices[:, skip_mode]), coo.shape[skip_mode]
+        )
+    # one implementation: the schedule fields index identically whether they
+    # are host numpy (a ScatterPlan / SortedCOO) or device arrays.
+    return sparse_ttm_chain_device(
+        coo.indices, coo.values, factors, skip_mode, plan,
+        shape=tuple(coo.shape), interpret=interp, fused=fused,
+    )
+
+
+def sparse_ttm_chain_device(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: Sequence[jax.Array],
+    skip_mode: int,
+    sched,
+    *,
+    shape: Sequence[int],
+    interpret: bool,
+    fused: bool = True,
+) -> jax.Array:
+    """Trace-safe twin of :func:`sparse_ttm_chain_kernel` for the compiled
+    scan-over-sweeps pipeline: the schedule (``sched``, a
+    ``sparse.layout.DeviceSchedule``) is already device-resident, ``shape`` /
+    ``interpret`` are static, and no numpy or host sync happens — safe to
+    call under ``jit`` / ``lax.scan`` / ``lax.cond``.
+    """
+    n = len(shape)
+    n_rows = int(shape[skip_mode])
+    if indices.shape[0] == 0:
         from repro.core.kron import zero_unfolding
 
-        return zero_unfolding(coo.shape, factors, skip_mode)
-    if plan is None:
-        plan = build_scatter_plan(np.asarray(coo.indices[:, skip_mode]), n_rows)
-    order = jnp.asarray(plan.order)
-    valid = jnp.asarray(plan.valid)
-    idx = coo.indices[order]
-    vals = coo.values[order] * valid
-
+        return zero_unfolding(tuple(shape), factors, skip_mode)
+    idx = indices[sched.order]
+    vals = values[sched.order] * sched.valid
     modes = [t for t in range(n - 1, -1, -1) if t != skip_mode]
     rows = [factors[t][idx[:, t]] for t in modes]
     if len(rows) == 1:  # order-2 tensor: the "Kron row" is a single factor row
         rows.append(jnp.ones((rows[0].shape[0], 1), dtype=rows[0].dtype))
     if len(rows) == 2 and fused:
         return kron_kernel.fused_kron_scatter_pallas(
-            rows[0], rows[1], vals, plan, n_rows, interpret=interp
+            rows[0], rows[1], vals, sched, n_rows, interpret=interpret
         )
-    contrib = kron_contrib(rows[0], rows[1], vals, interpret=interp)
-    for extra in rows[2:]:  # order > 3: fold further factors in
-        contrib = kron_contrib(contrib, extra, jnp.ones_like(vals), interpret=interp)
-    return kron_kernel.scatter_rows_pallas(contrib, plan, n_rows, interpret=interp)
+    contrib = kron_contrib(rows[0], rows[1], vals, interpret=interpret)
+    for extra in rows[2:]:
+        contrib = kron_contrib(contrib, extra, jnp.ones_like(vals), interpret=interpret)
+    return kron_kernel.scatter_rows_pallas(contrib, sched, n_rows, interpret=interpret)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: Optional[float] = None,

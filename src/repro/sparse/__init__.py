@@ -1,8 +1,11 @@
 from repro.sparse.layout import (
+    DeviceSchedule,
     KronReusePlan,
     SortedCOO,
     build_kron_reuse,
     build_mode_layout,
+    build_schedule,
+    visited_row_mask,
 )
 from repro.sparse.generators import (
     random_sparse_tensor,

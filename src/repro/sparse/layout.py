@@ -22,8 +22,11 @@ with scalar prefetch.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import TYPE_CHECKING, NamedTuple, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 if TYPE_CHECKING:  # runtime access is duck-typed (indices/shape/ndim) —
@@ -76,6 +79,9 @@ class SortedCOO(NamedTuple):
     bn: int  # nonzeros per block
     bi: int  # output rows per block
     kron: Optional[KronReusePlan]  # None unless reuse=True
+    # keep-mask over output rows; None when every row block receives at least
+    # one nnz block (the common case) so the scatter kernels can skip masking.
+    row_mask: Optional[np.ndarray] = None
 
     @property
     def nnz_padded(self) -> int:
@@ -102,7 +108,8 @@ def build_schedule(
     Returns ``(order, valid, rel_row, blkmap, first, n_row_blocks, perm)``
     where ``order`` holds safe gather indices (padding slots point at 0 with
     ``valid == 0``) and ``perm`` is the plain stable sort by row (pre-padding,
-    for segment metadata). O(nnz log nnz).
+    for segment metadata). Fully vectorized: O(nnz log nnz) numpy with no
+    per-row-block interpreter loop, so 20K-row modes schedule in milliseconds.
     """
     if bn <= 0 or bi <= 0:
         raise ValueError(f"block sizes must be positive, got bn={bn} bi={bi}")
@@ -113,24 +120,28 @@ def build_schedule(
     sorted_rows = rows[perm]
     # row-block group boundaries within the sorted order.
     grp_bounds = np.searchsorted(sorted_rows, np.arange(0, n_row_blocks + 1) * bi)
-    order_parts = []
-    blkmap = []
-    first = []
-    for g in range(n_row_blocks):
-        lo, hi = int(grp_bounds[g]), int(grp_bounds[g + 1])
-        if hi == lo:
-            continue
-        members = perm[lo:hi]
-        pad = (-members.size) % bn
-        padded = np.concatenate([members, np.full((pad,), -1, dtype=np.int64)])
-        order_parts.append(padded)
-        n_blocks = padded.size // bn
-        blkmap.extend([g] * n_blocks)
-        first.extend([1] + [0] * (n_blocks - 1))
-    if not order_parts:  # empty tensor: one all-padding block
-        order_parts = [np.full((bn,), -1, dtype=np.int64)]
-        blkmap, first = [0], [1]
-    order = np.concatenate(order_parts)
+    cnt = np.diff(grp_bounds)  # (n_row_blocks,) nonzeros per row-block group
+    blocks_per_grp = -(-cnt // bn)  # ceil; 0 for empty groups
+    padded_len = blocks_per_grp * bn
+    total = int(padded_len.sum())
+    if total == 0:  # empty tensor: one all-padding block
+        order = np.full((bn,), -1, dtype=np.int64)
+        blkmap = np.zeros((1,), dtype=np.int32)
+        first = np.ones((1,), dtype=np.int32)
+    else:
+        out_start = np.concatenate([[0], np.cumsum(padded_len)[:-1]])
+        order = np.full((total,), -1, dtype=np.int64)
+        # destination slot of each sorted nonzero: its group's output offset
+        # plus its position within the group.
+        grp_of = np.repeat(np.arange(n_row_blocks), cnt)
+        dest = out_start[grp_of] + (np.arange(nnz) - grp_bounds[:-1][grp_of])
+        order[dest] = perm
+        blkmap = np.repeat(
+            np.arange(n_row_blocks, dtype=np.int32), blocks_per_grp
+        )
+        first = np.zeros((blkmap.shape[0],), dtype=np.int32)
+        blk_start = np.concatenate([[0], np.cumsum(blocks_per_grp)[:-1]])
+        first[blk_start[blocks_per_grp > 0]] = 1
     valid = (order >= 0).astype(np.float32)
     safe = np.where(order >= 0, order, 0)
     rel = rows[safe] % bi if nnz else np.zeros_like(safe)
@@ -139,11 +150,24 @@ def build_schedule(
         safe.astype(np.int32),
         valid,
         rel.astype(np.int32),
-        np.asarray(blkmap, dtype=np.int32),
-        np.asarray(first, dtype=np.int32),
+        blkmap,
+        first,
         n_row_blocks,
         perm,
     )
+
+
+def visited_row_mask(
+    blkmap: np.ndarray, n_row_blocks: int, bi: int, n_rows: int
+) -> Optional[np.ndarray]:
+    """Keep-mask over output rows for the scatter kernels: rows whose block is
+    never visited by the grid stay uninitialized and must be zeroed. Computed
+    once at plan-build time; ``None`` means every row block is visited."""
+    visited = np.zeros((n_row_blocks,), dtype=bool)
+    visited[np.asarray(blkmap)] = True
+    if visited.all():
+        return None
+    return np.repeat(visited, bi)[:n_rows]
 
 
 def build_mode_layout(
@@ -178,7 +202,99 @@ def build_mode_layout(
         bn=bn,
         bi=bi,
         kron=build_kron_reuse(coo, mode) if reuse else None,
+        row_mask=visited_row_mask(blkmap, n_row_blocks, bi, n_rows),
     )
+
+
+# ---------------------------------------------------------------------------
+# Device-resident schedules (the jitted sweep pipeline's view of a layout).
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DeviceSchedule:
+    """One mode's schedule with every array already committed to device.
+
+    The host-side :class:`SortedCOO` / :class:`KronReusePlan` are numpy — fine
+    for plan *construction*, but handing them to a jitted callee re-uploads
+    each array on every call. The paper builds its dataflow schedule once and
+    streams it; this is the analogue: upload once, then every sweep of the
+    compiled scan-over-sweeps pipeline (``core.hooi``) indexes device buffers.
+
+    A pytree: array fields are leaves (any may be ``None`` — plain-XLA sweeps
+    need no scatter schedule, non-reuse sweeps no Kron dedup), the block
+    geometry is static aux data, so a shape/blocking change correctly
+    retriggers compilation while same-schedule calls hit the jit cache.
+    """
+
+    # -- leaves (device arrays or None) -----------------------------------
+    order: Optional[jax.Array]
+    valid: Optional[jax.Array]
+    rel_row: Optional[jax.Array]
+    blkmap: Optional[jax.Array]
+    first: Optional[jax.Array]
+    row_mask: Optional[jax.Array]
+    kron_unique: Optional[jax.Array]
+    kron_inverse: Optional[jax.Array]
+    # -- static aux --------------------------------------------------------
+    mode: int
+    shape: Tuple[int, ...]
+    n_row_blocks: int
+    bn: int
+    bi: int
+    kron_modes: Optional[Tuple[int, ...]]
+
+    def tree_flatten(self):
+        children = (
+            self.order, self.valid, self.rel_row, self.blkmap, self.first,
+            self.row_mask, self.kron_unique, self.kron_inverse,
+        )
+        aux = (self.mode, self.shape, self.n_row_blocks, self.bn, self.bi,
+               self.kron_modes)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @classmethod
+    def from_layout(cls, layout: SortedCOO) -> "DeviceSchedule":
+        """Upload a host schedule's arrays to device exactly once."""
+        kron = layout.kron
+        return cls(
+            order=jnp.asarray(layout.order),
+            valid=jnp.asarray(layout.valid),
+            rel_row=jnp.asarray(layout.rel_row),
+            blkmap=jnp.asarray(layout.blkmap),
+            first=jnp.asarray(layout.first),
+            row_mask=(
+                None if layout.row_mask is None else jnp.asarray(layout.row_mask)
+            ),
+            kron_unique=None if kron is None else jnp.asarray(kron.unique_indices),
+            kron_inverse=None if kron is None else jnp.asarray(kron.inverse),
+            mode=layout.mode,
+            shape=tuple(layout.shape),
+            n_row_blocks=layout.n_row_blocks,
+            bn=layout.bn,
+            bi=layout.bi,
+            kron_modes=None if kron is None else tuple(kron.modes),
+        )
+
+    @classmethod
+    def from_kron_plan(
+        cls, plan: KronReusePlan, mode: int, shape: Tuple[int, ...]
+    ) -> "DeviceSchedule":
+        """Device-resident Kron-dedup plan only (the XLA reuse path needs no
+        scatter schedule)."""
+        return cls(
+            order=None, valid=None, rel_row=None, blkmap=None, first=None,
+            row_mask=None,
+            kron_unique=jnp.asarray(plan.unique_indices),
+            kron_inverse=jnp.asarray(plan.inverse),
+            mode=mode, shape=tuple(shape), n_row_blocks=0, bn=0, bi=0,
+            kron_modes=tuple(plan.modes),
+        )
 
 
 def layout_padding_fraction(layout: SortedCOO) -> float:
