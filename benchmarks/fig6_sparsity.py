@@ -14,21 +14,19 @@ def run(sparsities=(1e-5, 1e-4, 1e-3), size=200, rank=16, n_iter=2) -> list:
     import jax.numpy as jnp
 
     from benchmarks.common import time_fn
-    from repro.core.hooi import hooi_dense, hooi_sparse
+    from repro import tucker
     from repro.sparse.generators import random_sparse_tensor
 
     rows = []
     for sp in sparsities:
         coo = random_sparse_tensor((size,) * 3, sp, seed=int(sp * 1e7) % 997)
-        t0, _ = time_fn(
-            lambda: hooi_sparse(coo, (rank,) * 3, n_iter=n_iter, method="gram"),
-            warmup=1, iters=3,
-        )
+        sparse_plan = tucker.plan(tucker.spec_for(
+            coo, (rank,) * 3, n_iter=n_iter, method="gram"))
+        t0, _ = time_fn(lambda: sparse_plan(coo), warmup=1, iters=3)
         dense = coo.to_dense()
-        t1, _ = time_fn(
-            lambda: hooi_dense(dense, (rank,) * 3, n_iter=n_iter, method="svd"),
-            warmup=1, iters=3,
-        )
+        dense_plan = tucker.plan(tucker.spec_for(
+            dense, (rank,) * 3, n_iter=n_iter, method="svd"))
+        t1, _ = time_fn(lambda: dense_plan(dense), warmup=1, iters=3)
         rows.append(dict(sparsity=sp, nnz=coo.nnz, sparse_s=t0, dense_s=t1,
                          speedup=t1 / t0))
     return rows

@@ -1,4 +1,4 @@
-"""End-to-end ``hooi_sparse`` sweep-pipeline benchmark -> BENCH_sweep.json.
+"""End-to-end sweep-pipeline benchmark (repro.tucker plans) -> BENCH_sweep.json.
 
 Times the legacy per-sweep Python driver (``pipeline="python"``: one XLA
 dispatch + one blocking host sync per sweep) against the compiled
@@ -50,20 +50,26 @@ def bench_case(
     iters: int,
     label: str = "",
 ) -> dict:
+    from repro import tucker
     from repro.core import hooi
-    from repro.core.engine import make_engine
     from repro.sparse.generators import random_sparse_tensor
 
     coo = random_sparse_tensor(shape, density, seed=0)
-    # one engine per pipeline: schedules build once and stay device-resident,
-    # so the timed region is the sweep loop, not host-side plan construction.
-    engines = {p: make_engine(engine) for p in ("python", "scan")}
+    # one plan per pipeline: each owns its engine, so schedules build once and
+    # stay device-resident — the timed region is the sweep loop, not
+    # host-side plan construction.
+    plans = {
+        p: tucker.TuckerPlan(
+            tucker.TuckerSpec(
+                shape=tuple(shape), ranks=tuple(ranks), method=method,
+                engine=engine, pipeline=p, n_iter=n_iter,
+            )
+        )
+        for p in ("python", "scan")
+    }
 
     def run(pipeline):
-        return hooi.hooi_sparse(
-            coo, ranks, n_iter=n_iter, method=method,
-            engine=engines[pipeline], pipeline=pipeline,
-        )
+        return plans[pipeline](coo)
 
     import jax
 

@@ -18,7 +18,7 @@ def run(sizes=(50, 100, 200), rank=16, n_iter=3) -> list:
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
 
-    from repro.core.hooi import hooi_dense
+    from repro import tucker
 
     rows = []
     for size in sizes:
@@ -30,7 +30,7 @@ def run(sizes=(50, 100, 200), rank=16, n_iter=3) -> list:
         xj = jnp.asarray(x)
         errs = {}
         for method in ("svd", "householder", "gram"):
-            res = hooi_dense(xj, (rank,) * 3, n_iter=n_iter, method=method)
+            res = tucker.decompose(xj, (rank,) * 3, n_iter=n_iter, method=method)
             errs[method] = float(res.rel_error)
         rows.append(
             dict(size=f"{size}x{size}x{size}", svd=errs["svd"],

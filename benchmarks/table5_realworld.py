@@ -27,18 +27,18 @@ def run(names=("amazon", "nell2", "matmul", "angiogram")) -> list:
     import jax.numpy as jnp
 
     from benchmarks.common import time_fn
-    from repro.core.hooi import hooi_sparse, sweep_call_counts
+    from repro import tucker
+    from repro.core.hooi import sweep_call_counts
     from repro.sparse.datasets import PAPER_DATASETS
 
     rows = []
     for name in names:
         ds = PAPER_DATASETS[name]
         coo = ds.build()
-        t, _ = time_fn(
-            lambda: hooi_sparse(coo, ds.ranks, n_iter=ds.n_iter, method="householder"),
-            warmup=1, iters=3,
-        )
-        res = hooi_sparse(coo, ds.ranks, n_iter=ds.n_iter, method="householder")
+        plan = tucker.plan(tucker.spec_for(
+            coo, ds.ranks, n_iter=ds.n_iter, method="householder"))
+        t, _ = time_fn(lambda: plan(coo), warmup=1, iters=3)
+        res = plan(coo)
         counts = sweep_call_counts(ds.shape, ds.ranks, coo.nnz, ds.n_iter)
         rows.append(dict(
             name=name, shape="x".join(map(str, ds.shape)), nnz=coo.nnz,

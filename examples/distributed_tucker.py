@@ -12,8 +12,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 
+from repro import tucker
 from repro.core.distributed import hooi_sparse_distributed
-from repro.core.hooi import hooi_sparse
 from repro.launch.mesh import make_host_mesh
 from repro.sparse.generators import low_rank_sparse_tensor
 
@@ -24,7 +24,7 @@ def main():
     mesh = make_host_mesh()
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
-    ref = hooi_sparse(coo, (4, 3, 2), n_iter=3, method="gram")
+    ref = tucker.decompose(coo, (4, 3, 2), n_iter=3, method="gram")
     dist = hooi_sparse_distributed(coo, (4, 3, 2), mesh, n_iter=3, method="gram",
                                    nnz_axes=("data",))
     print(f"single-device rel_error: {float(ref.rel_error):.6f}")

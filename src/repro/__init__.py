@@ -1,0 +1,26 @@
+"""repro — sparse Tucker decomposition on a JAX/Pallas stack.
+
+Reproduction and scale-up of *Sparse Tucker Tensor Decomposition on a Hybrid
+FPGA-CPU Platform* (cs.DC 2020). The public decomposition API is the
+plan/execute front-end in :mod:`repro.tucker`; the algorithm internals live
+under :mod:`repro.core`, kernels under :mod:`repro.kernels`.
+"""
+from repro import tucker
+from repro.core.coo import SparseCOO
+from repro.tucker import (
+    TuckerPlan,
+    TuckerResult,
+    TuckerSpec,
+    decompose,
+    spec_for,
+)
+
+__all__ = [
+    "SparseCOO",
+    "TuckerPlan",
+    "TuckerResult",
+    "TuckerSpec",
+    "decompose",
+    "spec_for",
+    "tucker",
+]

@@ -5,7 +5,8 @@ Modules mirror the paper's accelerator decomposition:
   ttm.py          dense TTM, module 1 (Sec. III-B, Alg. 3)
   kron.py         sparse Kron-accumulation, module 2 (Sec. III-C, Alg. 4)
   qrp.py          QR with column pivoting, module 3 (Sec. III-D)
-  hooi.py         Alg. 1 (dense baseline) + Alg. 2 (sparse) drivers
+  hooi.py         sweep machinery + compiled pipelines; legacy driver shims
+                  (the public front-end is repro.tucker's plan/execute API)
   engine.py       sweep engine selection: XLA vs Pallas-kernel hot loops
   reconstruct.py  Eq. 7 reconstruction + error metrics
   distributed.py  pod-scale shard_map data-parallel Alg. 2
@@ -18,7 +19,15 @@ from repro.core.engine import (
     make_engine,
     resolve_engine,
 )
-from repro.core.hooi import HooiResult, hooi_dense, hooi_sparse, sparse_sweep
+from repro.core.hooi import (
+    HooiResult,
+    effective_ranks,
+    hooi_dense,
+    hooi_sparse,
+    init_factors,
+    sparse_sweep,
+    tucker_complete_dense,
+)
 from repro.core.kron import (
     kron_rows,
     precompute_kron_reuse,

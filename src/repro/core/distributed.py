@@ -28,7 +28,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.coo import SparseCOO
-from repro.core.hooi import init_factors
+from repro.core.hooi import effective_ranks, init_factors
 from repro.core.kron import kron_rows
 from repro.core.qrp import qrp, svd_factor
 from repro.core.ttm import ttm_unfolded
@@ -130,12 +130,15 @@ def hooi_sparse_distributed(
 ):
     """Data-parallel Alg. 2 over an arbitrary mesh. Matches the single-device
     ``hooi_sparse`` bit-for-bit up to psum reduction order."""
-    from repro.core.hooi import HooiResult  # local import to avoid cycle
+    from repro.tucker import TuckerSpec  # local import to avoid cycle
+    from repro.tucker.result import TuckerResult
 
     key = key if key is not None else jax.random.PRNGKey(0)
     nnz_axes = nnz_axes or tuple(mesh.axis_names)
     sharded = shard_nonzeros(coo, mesh, nnz_axes)
-    ranks = [min(int(r), coo.shape[i]) for i, r in enumerate(ranks)]
+    # same coupled clamping as the single-device path, so the attached spec's
+    # ranks always agree with the core/factor shapes actually produced.
+    ranks = effective_ranks(coo.shape, ranks)
     factors = init_factors(coo.shape, ranks, key)
     sweep = make_distributed_sweep(
         mesh, coo.shape, ranks, nnz_axes=nnz_axes, method=method
@@ -150,4 +153,12 @@ def hooi_sparse_distributed(
             jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)
         ) / jnp.sqrt(xnorm2)
         hist.append(float(err))
-    return HooiResult(core, factors, jnp.asarray(hist[-1]), np.asarray(hist))
+    from repro.core.reconstruct import compression_ratio
+
+    spec = TuckerSpec(shape=tuple(coo.shape), ranks=tuple(ranks),
+                      method=method, engine="xla", n_iter=n_iter)
+    return TuckerResult.from_history(
+        core, factors, np.asarray(hist), engine="xla", spec=spec,
+        compression_ratio=compression_ratio(spec.shape, spec.ranks),
+        dispatches=n_iter,
+    )

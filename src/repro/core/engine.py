@@ -89,6 +89,10 @@ class SweepEngine:
     bi: int = 128
     use_kron_reuse: bool = False
     interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
+    # cumulative count of host-side schedule constructions + device uploads;
+    # the plan API reports per-call deltas so a serving loop can assert its
+    # steady state is rebuild-free (tests/test_sweep_pipeline.py).
+    schedule_builds: int = 0
     layouts: Dict[int, SortedCOO] = dataclasses.field(default_factory=dict)
     kron_plans: Dict[int, KronReusePlan] = dataclasses.field(default_factory=dict)
     dev_schedules: Dict[int, Optional[DeviceSchedule]] = dataclasses.field(
@@ -128,12 +132,14 @@ class SweepEngine:
         self._bind(coo)
         if mode not in self.layouts:
             self.layouts[mode] = build_mode_layout(coo, mode, bn=self.bn, bi=self.bi)
+            self.schedule_builds += 1
         return self.layouts[mode]
 
     def kron_plan(self, coo: SparseCOO, mode: int) -> KronReusePlan:
         self._bind(coo)
         if mode not in self.kron_plans:
             self.kron_plans[mode] = build_kron_reuse(coo, mode)
+            self.schedule_builds += 1
         return self.kron_plans[mode]
 
     def device_schedule(self, coo: SparseCOO, mode: int) -> Optional[DeviceSchedule]:
@@ -147,11 +153,14 @@ class SweepEngine:
                 self.dev_schedules[mode] = DeviceSchedule.from_layout(
                     self.mode_layout(coo, mode)
                 )
+                self.schedule_builds += 1
             elif self.use_kron_reuse:
                 self.dev_schedules[mode] = DeviceSchedule.from_kron_plan(
                     self.kron_plan(coo, mode), mode, tuple(coo.shape)
                 )
+                self.schedule_builds += 1
             else:
+                # the plain-XLA path needs no schedule: not a build.
                 self.dev_schedules[mode] = None
         return self.dev_schedules[mode]
 

@@ -1,11 +1,15 @@
-"""HOOI drivers: dense (paper Alg. 1) and sparse (paper Alg. 2).
+"""HOOI sweep machinery + legacy driver shims.
 
-``hooi_dense``  — standard HOOI: full TTM chain + SVD (or QRP) factor update.
-  This is our stand-in baseline for the dense Tucker accelerator [25] that the
-  paper compares against.
-``hooi_sparse`` — the paper's contribution: COO nonzero-only Kron-accumulation
-  (module 2) + QRP factor update (module 3) + one dense mode-N TTM per sweep
-  for the core (module 1, Eq. 10/12).
+This module owns the *compiled program layer* of the decomposition:
+``sparse_sweep`` (one ALS sweep of paper Alg. 2), the jitted per-sweep
+program, the compiled scan-over-sweeps pipeline (``_scan_sweeps``) and its
+vmapped batch variant, plus the trace/dispatch instrumentation the perf
+regression tests read.
+
+The *front-end* lives in ``repro.tucker`` (plan/execute API); the historical
+entrypoints here — ``hooi_dense`` (Alg. 1 baseline), ``hooi_sparse``
+(Alg. 2), ``tucker_complete_dense`` (EM completion) — are thin deprecation
+shims that build a ``TuckerSpec`` and delegate, bit-identically.
 
 Convergence metric: for orthonormal factors produced by SVD/QRP the
 projection identity  ||X - G x {U}||_F^2 = ||X||_F^2 - ||G||_F^2  holds, so
@@ -15,15 +19,16 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from functools import partial
-from typing import Callable, List, Optional, Sequence, Tuple, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.coo import SparseCOO, fold_dense, unfold_dense
-from repro.core.engine import SweepEngine, make_engine, resolve_engine
+from repro.core.coo import SparseCOO, fold_dense
+from repro.core.engine import SweepEngine
 from repro.core.kron import (
     KronReusePlan,
     sparse_ttm_chain,
@@ -31,7 +36,7 @@ from repro.core.kron import (
     sparse_ttm_chain_reuse_device,
 )
 from repro.core.qrp import factor_update
-from repro.core.ttm import ttm_chain, ttm_unfolded
+from repro.core.ttm import ttm_unfolded
 
 PIPELINES = ("scan", "python")
 
@@ -63,15 +68,37 @@ class HooiResult:
     fit_history: np.ndarray  # per-sweep relative error
     engine: str = "xla"  # resolved sweep engine ("xla" for the dense driver)
 
+    @classmethod
+    def from_history(cls, core, factors, hist, engine: str = "xla", **extra):
+        """Build a result from a (possibly empty) fit history.
+
+        The single guarded construction path: when every sweep was masked
+        (e.g. an all-sentinel scan history) ``hist`` is empty and the final
+        relative error is NaN — never an ``IndexError`` on ``hist[-1]``.
+        ``extra`` passes through to subclass fields (``TuckerResult``).
+        """
+        hist = np.asarray(hist).reshape(-1)
+        rel = (
+            jnp.asarray(hist[-1]) if hist.size else jnp.asarray(jnp.float32(jnp.nan))
+        )
+        return cls(core, factors, rel, hist, engine=engine, **extra)
+
 
 def init_factors(
-    shape: Sequence[int], ranks: Sequence[int], key: jax.Array, orthonormal: bool = True
+    shape: Sequence[int],
+    ranks: Sequence[int],
+    key: jax.Array,
+    orthonormal: bool = True,
+    dtype=None,
 ) -> List[jax.Array]:
-    """Alg. 2 line 1: random init (orthonormalized for a sane first sweep)."""
+    """Alg. 2 line 1: random init (orthonormalized for a sane first sweep).
+    ``dtype=None`` follows the jax x64 flag (the legacy behavior)."""
+    if dtype is None:
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
     keys = jax.random.split(key, len(shape))
     factors = []
     for k, (i, r) in zip(keys, zip(shape, ranks)):
-        u = jax.random.normal(k, (i, r), dtype=jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+        u = jax.random.normal(k, (i, r), dtype=dtype)
         if orthonormal:
             u, _ = jnp.linalg.qr(u)
         factors.append(u)
@@ -79,7 +106,7 @@ def init_factors(
 
 
 # ---------------------------------------------------------------------------
-# Dense HOOI (paper Alg. 1) — the [25]-style baseline.
+# Dense HOOI (paper Alg. 1) — deprecation shim over repro.tucker.
 # ---------------------------------------------------------------------------
 
 
@@ -94,34 +121,24 @@ def hooi_dense(
 ) -> HooiResult:
     """Standard HOOI on a dense tensor. ``method``: 'svd' (Alg. 1 line 5),
     'householder' or 'gram' (the paper's QRP replacement, Table II).
-    ``factors_init`` warm-starts the sweep (completion / re-fits)."""
-    key = key if key is not None else jax.random.PRNGKey(0)
-    n = x.ndim
-    ranks = effective_ranks(x.shape, ranks)
-    factors = (
-        [jnp.asarray(f) for f in factors_init]
-        if factors_init is not None
-        else init_factors(x.shape, ranks, key)
+    ``factors_init`` warm-starts the sweep (completion / re-fits).
+
+    .. deprecated:: use ``repro.tucker`` (``decompose(x, ranks)`` or
+       ``plan(TuckerSpec(..., algorithm="dense"))``); this shim delegates.
+    """
+    from repro import tucker
+
+    warnings.warn(
+        "hooi_dense is deprecated; use repro.tucker.decompose / plan "
+        "(TuckerSpec(algorithm='dense')).",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    xnorm2 = jnp.sum(jnp.square(x.astype(jnp.promote_types(x.dtype, jnp.float32))))
-    hist = []
-    core = None
-    for _ in range(n_iter):
-        for mode in range(n):
-            y = ttm_chain(x, factors, skip=mode, transpose=True)
-            y_n = unfold_dense(y, mode)
-            factors[mode] = factor_update(y_n, ranks[mode], method)
-        # core from the last power iterate: G = Y x_N U_N^T (Eq. 10).
-        g_n = factors[n - 1].T @ unfold_dense(y, n - 1)
-        core_shape = list(ranks)
-        core = fold_dense(g_n, n - 1, core_shape)
-        err = jnp.sqrt(jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)) / jnp.sqrt(
-            xnorm2
-        )
-        hist.append(float(err))
-        if tol and len(hist) > 1 and abs(hist[-2] - hist[-1]) < tol:
-            break
-    return HooiResult(core, factors, jnp.asarray(hist[-1]), np.asarray(hist))
+    spec = tucker.TuckerSpec(
+        shape=tuple(x.shape), ranks=tuple(ranks), method=method,
+        n_iter=n_iter, tol=tol, algorithm="dense",
+    )
+    return tucker.plan(spec)(x, key=key, factors_init=factors_init)
 
 
 # ---------------------------------------------------------------------------
@@ -201,15 +218,7 @@ def _jitted_sweep(indices, values, factors, *, shape, ranks, method):
 # ---------------------------------------------------------------------------
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "shape", "ranks", "method", "n_iter", "engine_name", "interpret",
-        "use_reuse",
-    ),
-    donate_argnames=("factors",),
-)
-def _scan_sweeps(
+def _scan_sweeps_impl(
     indices,
     values,
     factors,
@@ -229,6 +238,9 @@ def _scan_sweeps(
     SWEEP_TRACE_COUNTS[(engine_name, shape, tuple(ranks), method, n_iter)] += 1
     n = len(shape)
     init_dtypes = tuple(f.dtype for f in factors)
+    # working precision of the core carry: float64 inputs keep float64 (parity
+    # with the per-sweep python driver); float32 stays exactly as before.
+    core_dtype = jnp.promote_types(values.dtype, jnp.float32)
 
     def mode_unfolding(fs, mode):
         if engine_name == "pallas":
@@ -263,7 +275,7 @@ def _scan_sweeps(
                 init_dtypes[mode]
             )
         g_n = core_unfolding(y_n, fs[n - 1])
-        core = fold_dense(g_n, n - 1, list(ranks)).astype(jnp.float32)
+        core = fold_dense(g_n, n - 1, list(ranks)).astype(core_dtype)
         err = (
             jnp.sqrt(jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0))
             / jnp.sqrt(xnorm2)
@@ -282,12 +294,43 @@ def _scan_sweeps(
 
     carry0 = (
         tuple(factors),
-        jnp.zeros(tuple(ranks), dtype=jnp.float32),
+        jnp.zeros(tuple(ranks), dtype=core_dtype),
         jnp.float32(jnp.inf),
         jnp.asarray(False),
     )
     (fs, core, _, _), hist = jax.lax.scan(body, carry0, None, length=n_iter)
     return fs, core, hist
+
+
+# the compiled per-tensor program (tests introspect its jit cache directly).
+_scan_sweeps = partial(
+    jax.jit,
+    static_argnames=(
+        "shape", "ranks", "method", "n_iter", "engine_name", "interpret",
+        "use_reuse",
+    ),
+    donate_argnames=("factors",),
+)(_scan_sweeps_impl)
+
+
+@partial(jax.jit, static_argnames=("shape", "ranks", "method", "n_iter"))
+def _batched_scan_sweeps(
+    indices, values, factors, xnorm2, tol, *, shape, ranks, method, n_iter
+):
+    """The whole multi-sweep program vmapped over a leading batch of
+    same-shape, nnz-padded sparse tensors — ``TuckerPlan.batch``'s one XLA
+    dispatch for k decompositions. Plain-XLA engine only: Pallas / Kron-reuse
+    schedules are per-tensor pytrees of data-dependent size and cannot share
+    one batched program."""
+
+    def one(idx, val, fs, xn):
+        return _scan_sweeps_impl(
+            idx, val, fs, xn, tol, None,
+            shape=shape, ranks=ranks, method=method, n_iter=n_iter,
+            engine_name="xla", interpret=False, use_reuse=False,
+        )
+
+    return jax.vmap(one)(indices, values, factors, xnorm2)
 
 
 def hooi_sparse(
@@ -303,6 +346,11 @@ def hooi_sparse(
 ) -> HooiResult:
     """The paper's sparse Tucker decomposition (Alg. 2).
 
+    .. deprecated:: use ``repro.tucker`` — build a ``TuckerSpec`` once, call
+       ``tucker.plan(spec)`` on many tensors (or ``tucker.decompose`` for a
+       one-shot). This shim builds the spec from its kwargs and delegates;
+       results are bit-identical to the plan API.
+
     Args:
       coo: the sparse input tensor (COO, paper Table I).
       ranks: multilinear rank (R_1..R_N).
@@ -316,89 +364,28 @@ def hooi_sparse(
         prebuilt :class:`~repro.core.engine.SweepEngine` is also accepted and
         reuses its cached (device-resident) schedules across calls.
       pipeline: 'scan' (default) compiles the whole multi-sweep loop into a
-        single XLA program — ``lax.scan`` over sweeps, donated factor/core
-        buffers, a jittable ``tol`` early-exit, and exactly one device->host
-        transfer (the fit history) per call. 'python' is the legacy
-        one-dispatch-plus-one-host-sync-per-sweep driver, kept as the
-        benchmark baseline (``benchmarks/sweep_bench.py``).
+        single XLA program; 'python' is the legacy per-sweep driver, kept as
+        the benchmark baseline (``benchmarks/sweep_bench.py``).
     """
-    if pipeline not in PIPELINES:
-        raise ValueError(f"pipeline must be one of {PIPELINES}, got {pipeline!r}")
-    if n_iter < 1:
-        raise ValueError(f"n_iter must be >= 1, got {n_iter}")
-    key = key if key is not None else jax.random.PRNGKey(0)
-    ranks = effective_ranks(coo.shape, ranks)
-    if isinstance(engine, SweepEngine):
-        eng: Optional[SweepEngine] = engine
-        engine_name = engine.name
-        if use_kron_reuse and not engine.use_kron_reuse:
-            import warnings
+    from repro import tucker
 
-            warnings.warn(
-                "use_kron_reuse=True is ignored: the prebuilt SweepEngine was "
-                "made with use_kron_reuse=False (pass make_engine(..., "
-                "use_kron_reuse=True) instead).",
-                RuntimeWarning,
-                stacklevel=2,
-            )
-    else:
-        eng = None
-        engine_name = resolve_engine(engine)
-    factors = init_factors(coo.shape, ranks, key)
-    xnorm2 = jnp.square(coo.norm())
-
-    if pipeline == "scan":
-        if eng is None:
-            eng = make_engine(engine_name, use_kron_reuse=use_kron_reuse)
-        use_reuse = eng.use_kron_reuse and eng.name == "xla"
-        scheds = tuple(eng.device_schedule(coo, m) for m in range(coo.ndim))
-        fs, core, hist_dev = _scan_sweeps(
-            coo.indices,
-            coo.values,
-            tuple(factors),
-            xnorm2,
-            jnp.float32(tol),
-            scheds,
-            shape=tuple(coo.shape),
-            ranks=tuple(ranks),
-            method=method,
-            n_iter=int(n_iter),
-            engine_name=eng.name,
-            interpret=eng.resolved_interpret() if eng.name == "pallas" else False,
-            use_reuse=use_reuse,
-        )
-        SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
-        hist = np.asarray(_fetch_history(hist_dev))  # the one d2h transfer
-        n_done = int(np.sum(hist != _SKIPPED))
-        hist = hist[:n_done]
-        return HooiResult(
-            core, list(fs), jnp.asarray(hist[-1]), hist, engine=eng.name
-        )
-
-    # -- legacy per-sweep python driver (pipeline="python") ----------------
-    if eng is None and (engine_name == "pallas" or use_kron_reuse):
-        eng = make_engine(engine_name, use_kron_reuse=use_kron_reuse)
-    hist = []
-    core = None
-    for _ in range(n_iter):
-        if eng is None or (eng.name == "xla" and not eng.use_kron_reuse):
-            fs, core = _jitted_sweep(
-                coo.indices, coo.values, tuple(factors),
-                shape=coo.shape, ranks=tuple(ranks), method=method,
-            )
-            factors = list(fs)
-        else:
-            factors, core = sparse_sweep(coo, factors, ranks, method, engine=eng)
-        SWEEP_DISPATCH_COUNTS[(engine_name, "python")] += 1
-        err = jnp.sqrt(jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)) / jnp.sqrt(
-            xnorm2
-        )
-        hist.append(float(err))  # blocking host sync — one per sweep
-        if tol and len(hist) > 1 and abs(hist[-2] - hist[-1]) < tol:
-            break
-    return HooiResult(
-        core, factors, jnp.asarray(hist[-1]), np.asarray(hist), engine=engine_name
+    warnings.warn(
+        "hooi_sparse is deprecated; use repro.tucker.plan / decompose.",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    prebuilt = engine if isinstance(engine, SweepEngine) else None
+    spec = tucker.TuckerSpec(
+        shape=tuple(coo.shape),
+        ranks=tuple(ranks),
+        method=method,
+        engine=prebuilt.name if prebuilt is not None else engine,
+        pipeline=pipeline,
+        n_iter=n_iter,
+        tol=tol,
+        use_kron_reuse=use_kron_reuse,
+    )
+    return tucker.plan(spec, engine=prebuilt)(coo, key=key)
 
 
 def tucker_complete_dense(
@@ -414,23 +401,23 @@ def tucker_complete_dense(
     missing entries from the current reconstruction. Dense working set —
     intended for the small/medium completion problems of those applications;
     the pod-scale path keeps X sparse (core.distributed).
-    """
-    from repro.core.reconstruct import reconstruct_dense
 
-    x_obs = coo.to_dense()
-    mask = SparseCOO(
-        coo.indices, jnp.ones_like(coo.values), coo.shape
-    ).to_dense() > 0
-    x = x_obs
-    res = None
-    factors = None
-    for _ in range(n_rounds):
-        res = hooi_dense(x, ranks, n_iter=n_iter, method=method, key=key,
-                         factors_init=factors)
-        factors = res.factors  # warm start: EM converges in a few rounds
-        xhat = reconstruct_dense(res.core, res.factors)
-        x = jnp.where(mask, x_obs, xhat)
-    return res
+    .. deprecated:: use ``repro.tucker`` with ``algorithm="complete"``; this
+       shim delegates.
+    """
+    from repro import tucker
+
+    warnings.warn(
+        "tucker_complete_dense is deprecated; use repro.tucker.decompose("
+        "..., algorithm='complete') / plan.",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    spec = tucker.TuckerSpec(
+        shape=tuple(coo.shape), ranks=tuple(ranks), method=method,
+        n_iter=n_iter, n_rounds=n_rounds, algorithm="complete",
+    )
+    return tucker.plan(spec)(coo, key=key)
 
 
 # ---------------------------------------------------------------------------

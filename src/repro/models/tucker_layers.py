@@ -20,14 +20,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hooi import hooi_dense
+from repro.tucker import decompose
 from repro.core.reconstruct import compression_ratio
 
 
 def tuckerize_linear(w: jax.Array, rank: Tuple[int, int], n_iter: int = 3,
                      method: str = "gram") -> Dict[str, jax.Array]:
     """Factor a weight matrix with the paper's HOOI (QRP updates)."""
-    res = hooi_dense(w.astype(jnp.float32), list(rank), n_iter=n_iter, method=method)
+    res = decompose(w.astype(jnp.float32), list(rank), n_iter=n_iter,
+                    method=method, algorithm="dense")
     return {
         "u1": res.factors[0],  # (m, r1)
         "core": res.core,  # (r1, r2)
@@ -47,8 +48,8 @@ def tuckerize_expert_stack(
     method: str = "gram",
 ) -> Dict[str, jax.Array]:
     """Factor the 3-way (E, d, ff) expert tensor with the paper's HOOI."""
-    res = hooi_dense(experts.astype(jnp.float32), list(ranks), n_iter=n_iter,
-                     method=method)
+    res = decompose(experts.astype(jnp.float32), list(ranks), n_iter=n_iter,
+                    method=method, algorithm="dense")
     return {
         "u_e": res.factors[0],
         "u_d": res.factors[1],

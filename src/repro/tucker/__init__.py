@@ -1,0 +1,40 @@
+"""repro.tucker — the unified plan/execute decomposition front-end.
+
+The stable API every scaling PR targets (sharding, async serving,
+multi-backend):
+
+    from repro import tucker
+
+    spec = tucker.TuckerSpec(shape=coo.shape, ranks=(16, 16, 16),
+                             method="gram", engine="auto")
+    plan = tucker.plan(spec)          # validated once; owns engine + program
+    res = plan(coo)                   # TuckerResult; 0 retraces when warm
+    results = plan.batch([coo_a, coo_b])   # one dispatch for k tensors
+
+    res = tucker.decompose(coo, (16, 16, 16))   # one-shot convenience
+
+The legacy entrypoints (``repro.core.hooi.hooi_sparse`` / ``hooi_dense`` /
+``tucker_complete_dense``) are deprecation shims over this package.
+"""
+from repro.tucker.planning import (
+    TuckerPlan,
+    clear_plan_cache,
+    decompose,
+    engine_for_spec,
+    plan,
+)
+from repro.tucker.result import TuckerResult
+from repro.tucker.spec import ALGORITHMS, METHODS, TuckerSpec, spec_for
+
+__all__ = [
+    "ALGORITHMS",
+    "METHODS",
+    "TuckerPlan",
+    "TuckerResult",
+    "TuckerSpec",
+    "clear_plan_cache",
+    "decompose",
+    "engine_for_spec",
+    "plan",
+    "spec_for",
+]

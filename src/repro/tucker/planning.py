@@ -1,0 +1,468 @@
+"""The plan/execute front-end: ``plan(spec) -> TuckerPlan``.
+
+One API instead of four entrypoints. A :class:`~repro.tucker.spec.TuckerSpec`
+is validated once; :func:`plan` returns a reusable :class:`TuckerPlan` that
+owns its :class:`~repro.core.engine.SweepEngine` (host + device-resident
+schedule caches) and dispatches into the compiled scan-over-sweeps program
+(``repro.core.hooi._scan_sweeps``) keyed by the spec — so repeated calls on
+same-shape tensors hit the jit compile cache with zero retraces, and a
+serving loop can assert that via the per-call counters on
+:class:`~repro.tucker.result.TuckerResult`.
+
+``TuckerPlan.batch`` is the new serving scenario: pad nnz across a batch of
+same-shape sparse tensors and ``vmap`` the whole multi-sweep program over the
+leading batch axis — one XLA dispatch for k decompositions.
+
+The legacy drivers (``hooi_sparse``/``hooi_dense``/``tucker_complete_dense``)
+are thin deprecation shims over this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hooi as _hooi
+from repro.core.coo import SparseCOO
+from repro.core.engine import SweepEngine, resolve_engine
+from repro.tucker.result import TuckerResult
+from repro.tucker.spec import TuckerSpec, spec_for
+
+__all__ = ["TuckerPlan", "plan", "decompose", "engine_for_spec", "clear_plan_cache"]
+
+
+def _total_traces() -> int:
+    return sum(_hooi.SWEEP_TRACE_COUNTS.values())
+
+
+def engine_for_spec(
+    spec: TuckerSpec,
+    prebuilt: Optional[SweepEngine] = None,
+    resolved: Optional[str] = None,
+) -> SweepEngine:
+    """The ONE place a plan's sweep engine comes from — both pipelines
+    ('scan' and 'python') route through here, so ``use_kron_reuse`` follows
+    a single rule: honored on the XLA engine, ignored on Pallas (whose
+    schedule has its own reuse layout), and warned about when a prebuilt
+    engine disagrees with the spec."""
+    if prebuilt is not None:
+        if spec.use_kron_reuse and not prebuilt.use_kron_reuse:
+            warnings.warn(
+                "use_kron_reuse=True is ignored: the prebuilt SweepEngine was "
+                "made with use_kron_reuse=False (pass make_engine(..., "
+                "use_kron_reuse=True) instead).",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+        elif prebuilt.use_kron_reuse and not spec.use_kron_reuse:
+            warnings.warn(
+                "the prebuilt SweepEngine overrides use_kron_reuse=False: it "
+                "was made with use_kron_reuse=True, so the Kron-reuse path "
+                "will run (the engine's setting wins).",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+        return prebuilt
+    from repro.core.engine import make_engine
+
+    name = resolved if resolved is not None else resolve_engine(spec.engine)
+    # name is already resolved, so make_engine's own resolve is a no-op
+    # (no double fallback warning) — but any future construction-time logic
+    # it grows applies to plan engines too.
+    return make_engine(name, use_kron_reuse=spec.use_kron_reuse)
+
+
+@dataclasses.dataclass
+class PlanStats:
+    """Cumulative counters over a plan's lifetime (per-call numbers live on
+    each :class:`TuckerResult`)."""
+
+    calls: int = 0
+    dispatches: int = 0
+    retraces: int = 0
+    schedule_builds: int = 0
+
+
+class TuckerPlan:
+    """A reusable, compile-once/run-many executable for one TuckerSpec.
+
+    Call it on a tensor of the spec's shape (``plan(coo)``), or on a batch
+    of same-shape sparse tensors (``plan.batch(coos)``). The plan owns its
+    sweep engine — per-tensor schedules are cached on the engine and rebuilt
+    only when a different tensor is handed in — and its compiled program is
+    keyed by the spec's static fields, so the steady state is zero retraces
+    and zero schedule rebuilds (asserted by ``tests/test_sweep_pipeline.py``).
+    """
+
+    def __init__(
+        self,
+        spec: TuckerSpec,
+        engine: Optional[SweepEngine] = None,
+        _resolved: Optional[str] = None,
+    ):
+        self.spec = spec
+        if spec.algorithm == "sparse":
+            self.engine: Optional[SweepEngine] = engine_for_spec(
+                spec, prebuilt=engine, resolved=_resolved
+            )
+        else:
+            if engine is not None:
+                raise ValueError(
+                    f"a SweepEngine only applies to algorithm='sparse' plans, "
+                    f"not {spec.algorithm!r} (the dense path is plain XLA)"
+                )
+            self.engine = None
+        self.stats = PlanStats()
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        eng = self.engine.name if self.engine is not None else "xla"
+        return (
+            f"TuckerPlan({self.spec.algorithm}, shape={self.spec.shape}, "
+            f"ranks={self.spec.ranks}, engine={eng}, "
+            f"pipeline={self.spec.pipeline}, calls={self.stats.calls})"
+        )
+
+    # -- public execution surface -----------------------------------------
+
+    def __call__(self, x, key=None, factors_init=None) -> TuckerResult:
+        """Run the planned decomposition on one tensor of the spec's shape."""
+        self.stats.calls += 1
+        if self.spec.algorithm == "dense":
+            return self._run_dense(x, key, factors_init)
+        coo = self._check_sparse_input(x)
+        if self.spec.algorithm == "complete":
+            return self._run_complete(coo, key, factors_init)
+        return self._run_sparse(coo, key, factors_init)
+
+    def batch(self, coos: Sequence[SparseCOO], keys=None) -> List[TuckerResult]:
+        """Decompose k same-shape sparse tensors as ONE batched dispatch.
+
+        Nonzeros are padded to the batch max (explicit zeros contribute
+        nothing to any contraction) and the whole compiled multi-sweep
+        program is ``vmap``-ed over the leading batch axis. Falls back to k
+        sequential calls — same results, k dispatches — for configurations
+        whose per-tensor schedules cannot share one program (the Pallas
+        engine, Kron-reuse dedup plans, the legacy python pipeline).
+
+        Per-call counters on the returned results describe the whole batched
+        dispatch, not one element.
+        """
+        if self.spec.algorithm != "sparse":
+            raise ValueError(
+                f"batch() requires algorithm='sparse', got {self.spec.algorithm!r}"
+            )
+        coos = [self._check_sparse_input(c) for c in coos]
+        if keys is None:
+            keys = [None] * len(coos)
+        keys = list(keys)
+        if len(keys) != len(coos):
+            raise ValueError(
+                f"got {len(keys)} keys for {len(coos)} tensors"
+            )
+        if not coos:
+            return []
+        eng = self.engine
+        vmappable = (
+            self.spec.pipeline == "scan"
+            and eng.name == "xla"
+            and not eng.use_kron_reuse
+        )
+        if not vmappable:
+            return [self(c, key=k) for c, k in zip(coos, keys)]
+        self.stats.calls += len(coos)  # same meaning as the sequential fallback
+        return self._run_sparse_vmapped(coos, keys)
+
+    # -- input validation ---------------------------------------------------
+
+    def _check_sparse_input(self, coo) -> SparseCOO:
+        if not isinstance(coo, SparseCOO):
+            raise TypeError(
+                f"algorithm={self.spec.algorithm!r} expects a SparseCOO input, "
+                f"got {type(coo).__name__}"
+            )
+        if tuple(coo.shape) != self.spec.shape:
+            raise ValueError(
+                f"input shape {tuple(coo.shape)} does not match the planned "
+                f"spec shape {self.spec.shape}"
+            )
+        dt = self.spec.resolved_dtype()
+        if dt is not None and coo.values.dtype != dt:
+            coo = SparseCOO(coo.indices, coo.values.astype(dt), coo.shape)
+        return coo
+
+    def _init_factors(self, key, factors_init):
+        if factors_init is not None:
+            # copy: the compiled scan pipeline donates its factor buffers, and
+            # donating the caller's arrays would delete them out from under a
+            # warm-start loop that reuses its seed factors.
+            return [jnp.array(f, copy=True) for f in factors_init]
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return _hooi.init_factors(
+            self.spec.shape, self.spec.ranks, key, dtype=self.spec.resolved_dtype()
+        )
+
+    def _compression(self) -> float:
+        from repro.core.reconstruct import compression_ratio
+
+        return compression_ratio(self.spec.shape, self.spec.ranks)
+
+    def _result(self, core, factors, hist, engine, dispatches, retraces,
+                schedule_builds) -> TuckerResult:
+        self.stats.dispatches += dispatches
+        self.stats.retraces += retraces
+        self.stats.schedule_builds += schedule_builds
+        return TuckerResult.from_history(
+            core, factors, hist,
+            engine=engine,
+            spec=self.spec,
+            compression_ratio=self._compression(),
+            dispatches=dispatches,
+            retraces=retraces,
+            schedule_builds=schedule_builds,
+        )
+
+    # -- sparse (paper Alg. 2) ---------------------------------------------
+
+    def _run_sparse(self, coo: SparseCOO, key, factors_init) -> TuckerResult:
+        factors = self._init_factors(key, factors_init)
+        xnorm2 = jnp.square(coo.norm())
+        if self.spec.pipeline == "scan":
+            return self._run_sparse_scan(coo, factors, xnorm2)
+        return self._run_sparse_python(coo, factors, xnorm2)
+
+    def _run_sparse_scan(self, coo, factors, xnorm2) -> TuckerResult:
+        spec, eng = self.spec, self.engine
+        use_reuse = eng.use_kron_reuse and eng.name == "xla"
+        builds0 = eng.schedule_builds
+        scheds = tuple(eng.device_schedule(coo, m) for m in range(coo.ndim))
+        traces0 = _total_traces()
+        fs, core, hist_dev = _hooi._scan_sweeps(
+            coo.indices,
+            coo.values,
+            tuple(factors),
+            xnorm2,
+            jnp.float32(spec.tol),
+            scheds,
+            shape=spec.shape,
+            ranks=spec.ranks,
+            method=spec.method,
+            n_iter=spec.n_iter,
+            engine_name=eng.name,
+            interpret=eng.resolved_interpret() if eng.name == "pallas" else False,
+            use_reuse=use_reuse,
+        )
+        _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
+        hist = np.asarray(_hooi._fetch_history(hist_dev))  # the one d2h transfer
+        n_done = int(np.sum(hist != _hooi._SKIPPED))
+        return self._result(
+            core, list(fs), hist[:n_done],
+            engine=eng.name,
+            dispatches=1,
+            retraces=_total_traces() - traces0,
+            schedule_builds=eng.schedule_builds - builds0,
+        )
+
+    def _run_sparse_python(self, coo, factors, xnorm2) -> TuckerResult:
+        """The legacy per-sweep driver (benchmark baseline): one dispatch and
+        one blocking host sync per sweep, same math as the scan pipeline."""
+        spec, eng = self.spec, self.engine
+        builds0 = eng.schedule_builds
+        hist: List[float] = []
+        core = None
+        dispatches = 0
+        for _ in range(spec.n_iter):
+            if eng.name == "xla" and not eng.use_kron_reuse:
+                fs, core = _hooi._jitted_sweep(
+                    coo.indices, coo.values, tuple(factors),
+                    shape=spec.shape, ranks=spec.ranks, method=spec.method,
+                )
+                factors = list(fs)
+            else:
+                factors, core = _hooi.sparse_sweep(
+                    coo, factors, spec.ranks, spec.method, engine=eng
+                )
+            _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "python")] += 1
+            dispatches += 1
+            err = jnp.sqrt(
+                jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)
+            ) / jnp.sqrt(xnorm2)
+            hist.append(float(err))  # blocking host sync — one per sweep
+            if spec.tol and len(hist) > 1 and abs(hist[-2] - hist[-1]) < spec.tol:
+                break
+        return self._result(
+            core, factors, np.asarray(hist),
+            engine=eng.name,
+            dispatches=dispatches,
+            retraces=0,  # tracked for the compiled scan pipeline only
+            schedule_builds=eng.schedule_builds - builds0,
+        )
+
+    def _run_sparse_vmapped(self, coos, keys) -> List[TuckerResult]:
+        spec = self.spec
+        nnz_max = max(c.indices.shape[0] for c in coos)
+        padded = [c.pad_to(nnz_max) for c in coos]
+        idx = jnp.stack([c.indices for c in padded])
+        val = jnp.stack([c.values for c in padded])
+        jkeys = jnp.stack(
+            [k if k is not None else jax.random.PRNGKey(0) for k in keys]
+        )
+        dt = spec.resolved_dtype()
+
+        def init_one(k):
+            return tuple(_hooi.init_factors(spec.shape, spec.ranks, k, dtype=dt))
+
+        factors = jax.vmap(init_one)(jkeys)
+        # identical formula to the per-tensor path (square of the norm), so
+        # batched results are bit-compatible with sequential calls.
+        xnorm2 = jax.vmap(
+            lambda v: jnp.square(
+                jnp.sqrt(jnp.sum(jnp.square(v.astype(jnp.float32))))
+            )
+        )(val)
+        traces0 = _total_traces()
+        fs, core, hist_dev = _hooi._batched_scan_sweeps(
+            idx, val, factors, xnorm2, jnp.float32(spec.tol),
+            shape=spec.shape,
+            ranks=spec.ranks,
+            method=spec.method,
+            n_iter=spec.n_iter,
+        )
+        _hooi.SWEEP_DISPATCH_COUNTS[("xla", "scan")] += 1
+        hists = np.asarray(_hooi._fetch_history(hist_dev))  # (k, n_iter)
+        retraces = _total_traces() - traces0
+        results = []
+        for i in range(len(coos)):
+            hist = hists[i]
+            n_done = int(np.sum(hist != _hooi._SKIPPED))
+            results.append(
+                self._result(
+                    core[i], [f[i] for f in fs], hist[:n_done],
+                    engine="xla",
+                    dispatches=1 if i == 0 else 0,
+                    retraces=retraces if i == 0 else 0,
+                    schedule_builds=0,
+                )
+            )
+        return results
+
+    # -- dense (paper Alg. 1) ----------------------------------------------
+
+    def _run_dense(self, x, key, factors_init) -> TuckerResult:
+        from repro.core.coo import fold_dense, unfold_dense
+        from repro.core.qrp import factor_update
+        from repro.core.ttm import ttm_chain
+
+        spec = self.spec
+        x = jnp.asarray(x)
+        if tuple(x.shape) != spec.shape:
+            raise ValueError(
+                f"input shape {tuple(x.shape)} does not match the planned "
+                f"spec shape {spec.shape}"
+            )
+        dt = spec.resolved_dtype()
+        if dt is not None and x.dtype != dt:
+            x = x.astype(dt)
+        n = x.ndim
+        ranks = spec.ranks
+        factors = self._init_factors(key, factors_init)
+        xnorm2 = jnp.sum(
+            jnp.square(x.astype(jnp.promote_types(x.dtype, jnp.float32)))
+        )
+        hist: List[float] = []
+        core = None
+        for _ in range(spec.n_iter):
+            for mode in range(n):
+                y = ttm_chain(x, factors, skip=mode, transpose=True)
+                y_n = unfold_dense(y, mode)
+                factors[mode] = factor_update(y_n, ranks[mode], spec.method)
+            # core from the last power iterate: G = Y x_N U_N^T (Eq. 10).
+            g_n = factors[n - 1].T @ unfold_dense(y, n - 1)
+            core = fold_dense(g_n, n - 1, list(ranks))
+            err = jnp.sqrt(
+                jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)
+            ) / jnp.sqrt(xnorm2)
+            hist.append(float(err))
+            if spec.tol and len(hist) > 1 and abs(hist[-2] - hist[-1]) < spec.tol:
+                break
+        return self._result(
+            core, factors, np.asarray(hist),
+            engine="xla",
+            dispatches=0,  # eager dense loop: dispatches not tracked
+            retraces=0,
+            schedule_builds=0,
+        )
+
+    # -- completion (EM over the dense runner) -------------------------------
+
+    def _run_complete(self, coo: SparseCOO, key, factors_init=None) -> TuckerResult:
+        """EM-style Tucker completion (paper use cases: MRI reconstruction
+        [27], process-variation prediction [15]): alternate dense HOOI with
+        imputation of the missing entries from the current reconstruction.
+        ``factors_init`` seeds the first EM round."""
+        from repro.core.reconstruct import reconstruct_dense
+
+        x_obs = coo.to_dense()
+        mask = SparseCOO(
+            coo.indices, jnp.ones_like(coo.values), coo.shape
+        ).to_dense() > 0
+        x = x_obs
+        res = None
+        factors = factors_init
+        for _ in range(self.spec.n_rounds):
+            res = self._run_dense(x, key, factors_init=factors)
+            factors = res.factors  # warm start: EM converges in a few rounds
+            xhat = reconstruct_dense(res.core, res.factors)
+            x = jnp.where(mask, x_obs, xhat)
+        return res
+
+
+# ---------------------------------------------------------------------------
+# The plan cache: one TuckerPlan (and therefore one engine + one compiled
+# program family) per (spec, resolved engine).
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[Tuple[TuckerSpec, str], TuckerPlan] = {}
+
+
+def plan(spec: TuckerSpec, *, engine: Optional[SweepEngine] = None) -> TuckerPlan:
+    """Build (or fetch the cached) :class:`TuckerPlan` for ``spec``.
+
+    Plans are cached per (spec, resolved engine), so every caller asking for
+    the same problem shares one engine — and its schedule caches — and one
+    compiled program. Passing a prebuilt ``engine`` bypasses the cache and
+    wraps that engine directly (its cached device schedules are reused
+    across calls, like handing ``hooi_sparse`` a ``SweepEngine`` did).
+    """
+    if engine is not None:
+        return TuckerPlan(spec, engine=engine)
+    if spec.algorithm != "sparse":
+        key = (spec, "xla")
+    else:
+        # resolve on every lookup: 'auto'/'pallas' may map differently (and
+        # warn) as backend availability changes — exactly like the legacy
+        # drivers resolved per call.
+        key = (spec, resolve_engine(spec.engine))
+    cached = _PLAN_CACHE.get(key)
+    if cached is None:
+        cached = _PLAN_CACHE[key] = TuckerPlan(spec, _resolved=key[1])
+    return cached
+
+
+def clear_plan_cache() -> None:
+    """Drop all cached plans (test isolation / freeing device schedules)."""
+    _PLAN_CACHE.clear()
+
+
+def decompose(x, ranks: Sequence[int], *, key=None, factors_init=None,
+              **spec_kwargs) -> TuckerResult:
+    """One-shot convenience: infer the spec from ``x``, plan (cached), run.
+
+    ``spec_kwargs`` are :class:`TuckerSpec` fields (method, engine, pipeline,
+    n_iter, tol, dtype, use_kron_reuse, algorithm, n_rounds).
+    """
+    spec = spec_for(x, ranks, **spec_kwargs)
+    return plan(spec)(x, key=key, factors_init=factors_init)

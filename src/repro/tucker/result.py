@@ -1,0 +1,52 @@
+"""TuckerResult — the unified result type of the plan/execute API.
+
+Subsumes the legacy ``repro.core.hooi.HooiResult`` (it *is* one, by
+subclassing, so every existing consumer keeps working) and adds the serving
+metadata the ROADMAP's scenarios need: the spec that produced it, the
+compression ratio, the sweep count, and per-call dispatch/retrace/schedule
+counters so a serving loop can assert its steady state is compile-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional
+
+import numpy as np
+
+from repro.core.hooi import HooiResult
+
+if TYPE_CHECKING:
+    from repro.tucker.spec import TuckerSpec
+
+
+@dataclasses.dataclass
+class TuckerResult(HooiResult):
+    """A :class:`~repro.core.hooi.HooiResult` plus plan/serving metadata.
+
+    Inherited: ``core``, ``factors``, ``rel_error``, ``fit_history``,
+    ``engine``. Added:
+
+    Attributes:
+      spec: the :class:`~repro.tucker.spec.TuckerSpec` this run executed.
+      compression_ratio: dense storage / Tucker storage (factors included);
+        the paper's core-only convention is
+        ``repro.core.reconstruct.compression_ratio(..., include_factors=False)``.
+      dispatches: top-level XLA dispatches this call issued (1 for the scan
+        pipeline, ``n_sweeps`` for the legacy python pipeline; 0 where not
+        tracked, e.g. the dense eager driver).
+      retraces: traces of the compiled sweep pipeline this call triggered
+        (0 on every plan-cache hit — the serving steady state).
+      schedule_builds: host-side schedule constructions/uploads this call
+        triggered (0 when the engine's per-tensor caches were warm).
+    """
+
+    spec: Optional["TuckerSpec"] = None
+    compression_ratio: Optional[float] = None
+    dispatches: int = 0
+    retraces: int = 0
+    schedule_builds: int = 0
+
+    @property
+    def n_sweeps(self) -> int:
+        """ALS sweeps that actually ran (after any ``tol`` early exit)."""
+        return int(np.asarray(self.fit_history).size)

@@ -1,0 +1,140 @@
+"""TuckerSpec — the frozen problem description behind the plan/execute API.
+
+A spec captures *everything* that determines the compiled decomposition
+program: tensor shape, multilinear ranks, factor-update method, sweep engine,
+pipeline, sweep budget, tolerance, working dtype, and the Kron-reuse flag.
+Validation happens exactly once, at construction; the spec is hashable so
+``repro.tucker.plan`` can key its plan cache (and therefore the jit compile
+cache) on it — repeated calls on same-shape tensors hit the cache with zero
+retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import ENGINES
+from repro.core.hooi import PIPELINES, effective_ranks
+
+METHODS = ("svd", "householder", "gram")
+ALGORITHMS = ("sparse", "dense", "complete")
+
+
+def _canonical_dtype(dtype) -> str:
+    """Normalize a dtype spec to a canonical string ("auto" = follow the
+    jax x64 flag at execution time, the legacy drivers' behavior)."""
+    if dtype is None or dtype == "auto":
+        return "auto"
+    import jax.numpy as jnp
+
+    return jnp.dtype(dtype).name
+
+
+@dataclasses.dataclass(frozen=True)
+class TuckerSpec:
+    """Frozen, validated description of one Tucker decomposition problem.
+
+    Attributes:
+      shape: dense logical shape (I_1, ..., I_N) of the input tensor.
+      ranks: requested multilinear rank; clamped to the representable
+        fixpoint (R_n <= min(I_n, prod_{t != n} R_t)) at construction.
+      method: factor update — 'householder' (paper QRP), 'gram' (TPU QRP
+        variant) or 'svd'.
+      engine: 'xla', 'pallas' or 'auto' — how the sweep hot loops execute
+        (see ``repro.core.engine``).
+      pipeline: 'scan' (whole multi-sweep loop is one XLA program) or
+        'python' (legacy per-sweep driver, the benchmark baseline).
+      n_iter: max ALS sweeps per decomposition.
+      tol: early-exit threshold on consecutive fit deltas (0 disables). A
+        *dynamic* argument of the compiled pipeline — changing it never
+        recompiles.
+      dtype: working precision of values/factors; "auto" follows the jax
+        x64 flag (legacy behavior).
+      use_kron_reuse: the paper's Sec. III-C Kronecker-row dedup on the XLA
+        engine (the Pallas schedule has its own reuse layout).
+      algorithm: 'sparse' (paper Alg. 2, COO input), 'dense' (Alg. 1,
+        dense input) or 'complete' (EM-style completion, COO input).
+      n_rounds: EM rounds for algorithm='complete' (ignored otherwise).
+    """
+
+    shape: Tuple[int, ...]
+    ranks: Tuple[int, ...]
+    method: str = "householder"
+    engine: str = "auto"
+    pipeline: str = "scan"
+    n_iter: int = 5
+    tol: float = 0.0
+    dtype: str = "auto"
+    use_kron_reuse: bool = False
+    algorithm: str = "sparse"
+    n_rounds: int = 10
+
+    def __post_init__(self):
+        shape = tuple(int(s) for s in self.shape)
+        if not shape or any(s < 1 for s in shape):
+            raise ValueError(f"shape must be positive, got {self.shape}")
+        ranks = tuple(int(r) for r in self.ranks)
+        if len(ranks) != len(shape):
+            raise ValueError(
+                f"ranks {ranks} and shape {shape} disagree on tensor order"
+            )
+        if any(r < 1 for r in ranks):
+            raise ValueError(f"ranks must be positive, got {self.ranks}")
+        ranks = tuple(effective_ranks(shape, ranks))
+        if self.method not in METHODS:
+            raise ValueError(f"method must be one of {METHODS}, got {self.method!r}")
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {self.engine!r}")
+        if self.pipeline not in PIPELINES:
+            raise ValueError(
+                f"pipeline must be one of {PIPELINES}, got {self.pipeline!r}"
+            )
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(
+                f"algorithm must be one of {ALGORITHMS}, got {self.algorithm!r}"
+            )
+        if int(self.n_iter) < 1:
+            raise ValueError(f"n_iter must be >= 1, got {self.n_iter}")
+        if int(self.n_rounds) < 1:
+            raise ValueError(f"n_rounds must be >= 1, got {self.n_rounds}")
+        if not (float(self.tol) >= 0.0):  # also rejects NaN
+            raise ValueError(f"tol must be >= 0, got {self.tol}")
+        object.__setattr__(self, "shape", shape)
+        object.__setattr__(self, "ranks", ranks)
+        object.__setattr__(self, "n_iter", int(self.n_iter))
+        object.__setattr__(self, "n_rounds", int(self.n_rounds))
+        object.__setattr__(self, "tol", float(self.tol))
+        object.__setattr__(self, "dtype", _canonical_dtype(self.dtype))
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    def resolved_dtype(self):
+        """The concrete working dtype, or ``None`` for "auto" (follow the
+        jax x64 flag at execution time, like the legacy drivers)."""
+        if self.dtype == "auto":
+            return None
+        import jax.numpy as jnp
+
+        return jnp.dtype(self.dtype)
+
+
+def spec_for(
+    x,
+    ranks: Sequence[int],
+    **kwargs,
+) -> TuckerSpec:
+    """Build a :class:`TuckerSpec` from a tensor (``SparseCOO`` or dense
+    array) — the shape and default algorithm are inferred from the input."""
+    from repro.core.coo import SparseCOO
+
+    if isinstance(x, SparseCOO):
+        kwargs.setdefault("algorithm", "sparse")
+        shape = x.shape
+    else:
+        kwargs.setdefault("algorithm", "dense")
+        shape = np.asarray(x).shape if not hasattr(x, "shape") else x.shape
+    return TuckerSpec(shape=tuple(shape), ranks=tuple(ranks), **kwargs)

@@ -1,11 +1,12 @@
-"""HOOI drivers: Alg. 1 vs Alg. 2, QRP-vs-SVD accuracy (paper Table II)."""
+"""HOOI via the plan/execute front-end: Alg. 1 vs Alg. 2, QRP-vs-SVD
+accuracy (paper Table II), and the legacy shims' bit-parity with the API."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import tucker
 from repro.core.coo import SparseCOO
-from repro.core.hooi import hooi_dense, hooi_sparse
 from repro.core.reconstruct import (
     compression_ratio, reconstruct_at, reconstruct_dense, relative_error_dense,
 )
@@ -25,7 +26,7 @@ def _lowrank_dense(shape, ranks, seed=0):
 def test_dense_hooi_recovers_exact_rank():
     x = jnp.asarray(_lowrank_dense((20, 18, 16), (4, 3, 2)))
     for method in ("svd", "householder", "gram"):
-        res = hooi_dense(x, (4, 3, 2), n_iter=3, method=method)
+        res = tucker.decompose(x, (4, 3, 2), n_iter=3, method=method)
         assert float(res.rel_error) < 5e-3, method
         # exact reconstruction check (not just the projection identity)
         assert float(relative_error_dense(x, res.core, res.factors)) < 5e-3
@@ -35,8 +36,8 @@ def test_sparse_hooi_matches_dense_hooi():
     """Alg. 2 on a fully-stored COO == Alg. 1 on the dense tensor."""
     x = _lowrank_dense((15, 12, 10), (3, 3, 2), seed=5)
     coo = SparseCOO.from_dense(x)
-    d = hooi_dense(jnp.asarray(x), (3, 3, 2), n_iter=3, method="svd")
-    s = hooi_sparse(coo, (3, 3, 2), n_iter=3, method="svd")
+    d = tucker.decompose(jnp.asarray(x), (3, 3, 2), n_iter=3, method="svd")
+    s = tucker.decompose(coo, (3, 3, 2), n_iter=3, method="svd")
     np.testing.assert_allclose(
         float(s.rel_error), float(d.rel_error), atol=1e-3
     )
@@ -51,7 +52,7 @@ def test_qrp_matches_svd():
         errs = {}
         for method in ("svd", "householder", "gram"):
             errs[method] = float(
-                hooi_dense(xn, (8, 8, 8), n_iter=3, method=method).rel_error
+                tucker.decompose(xn, (8, 8, 8), n_iter=3, method=method).rel_error
             )
         # same accuracy scale (the paper's exact-agreement claim at the
         # 1e-9 error floor is reproduced in float64 by benchmarks/table2)
@@ -61,8 +62,9 @@ def test_qrp_matches_svd():
 
 def test_kron_reuse_is_exact():
     coo = random_sparse_tensor((20, 20, 20), 0.02, seed=4)
-    a = hooi_sparse(coo, (4, 4, 4), n_iter=2, method="gram")
-    b = hooi_sparse(coo, (4, 4, 4), n_iter=2, method="gram", use_kron_reuse=True)
+    a = tucker.decompose(coo, (4, 4, 4), n_iter=2, method="gram")
+    b = tucker.decompose(coo, (4, 4, 4), n_iter=2, method="gram",
+                         use_kron_reuse=True)
     np.testing.assert_allclose(float(a.rel_error), float(b.rel_error), atol=1e-5)
     np.testing.assert_allclose(np.asarray(a.core), np.asarray(b.core), atol=1e-3)
 
@@ -70,18 +72,17 @@ def test_kron_reuse_is_exact():
 def test_tucker_completion_recovers_sampled_tensor():
     """Recoverable regime (paper use cases [27]/[15]): EM-style completion
     on 20%-sampled exactly-low-rank data recovers the observed entries."""
-    from repro.core.hooi import tucker_complete_dense
-
     density = 0.3  # 20% sits below this problem's practical EM threshold
     coo, truth = low_rank_sparse_tensor((30, 30, 30), (3, 3, 3), density, seed=9)
-    res = tucker_complete_dense(coo, (3, 3, 3), n_rounds=20, n_iter=2)
+    res = tucker.decompose(coo, (3, 3, 3), algorithm="complete", n_rounds=20,
+                           n_iter=2, method="gram")
     xhat = reconstruct_at(res.core, res.factors, coo.indices)
     rel = float(
         jnp.linalg.norm(xhat - coo.values) / jnp.linalg.norm(coo.values)
     )
     assert rel < 0.05
     # zero-filled single-shot HOOI is far worse — completion is doing work
-    res0 = hooi_sparse(coo, (3, 3, 3), n_iter=4, method="gram")
+    res0 = tucker.decompose(coo, (3, 3, 3), n_iter=4, method="gram")
     xhat0 = reconstruct_at(res0.core, res0.factors, coo.indices)
     rel0 = float(jnp.linalg.norm(xhat0 - coo.values) / jnp.linalg.norm(coo.values))
     assert rel < rel0
@@ -90,7 +91,7 @@ def test_tucker_completion_recovers_sampled_tensor():
 def test_projection_identity_matches_dense_error():
     x = _lowrank_dense((12, 11, 10), (3, 3, 3), seed=2)
     xn = x + 0.05 * np.random.default_rng(0).standard_normal(x.shape).astype(np.float32)
-    res = hooi_dense(jnp.asarray(xn), (3, 3, 3), n_iter=3, method="svd")
+    res = tucker.decompose(jnp.asarray(xn), (3, 3, 3), n_iter=3, method="svd")
     direct = float(relative_error_dense(jnp.asarray(xn), res.core, res.factors))
     assert float(res.rel_error) == pytest.approx(direct, rel=1e-2)
 
@@ -100,3 +101,39 @@ def test_compression_ratio_paper_angiogram():
     assert compression_ratio((130, 150), (30, 35), include_factors=False) \
         == pytest.approx(18.57, rel=0.01)
     assert compression_ratio((130, 150), (30, 35)) == pytest.approx(1.91, rel=0.02)
+
+
+# ---------------------------------------------------------------------------
+# Legacy deprecation shims: bit-parity with the plan API, and they warn.
+# ---------------------------------------------------------------------------
+
+
+def test_hooi_sparse_shim_bit_identical_to_plan():
+    from repro.core.hooi import hooi_sparse
+
+    coo = random_sparse_tensor((18, 14, 10), 0.05, seed=12)
+    want = tucker.decompose(coo, (3, 3, 2), n_iter=3, method="gram", engine="xla")
+    with pytest.warns(DeprecationWarning, match="hooi_sparse is deprecated"):
+        got = hooi_sparse(coo, (3, 3, 2), n_iter=3, method="gram", engine="xla")
+    assert isinstance(got, tucker.TuckerResult)  # subsumes HooiResult
+    np.testing.assert_array_equal(np.asarray(got.core), np.asarray(want.core))
+    for a, b in zip(got.factors, want.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(got.fit_history, want.fit_history)
+
+
+def test_dense_and_complete_shims_match_plan():
+    from repro.core.hooi import hooi_dense, tucker_complete_dense
+
+    x = jnp.asarray(_lowrank_dense((12, 10, 8), (3, 3, 2), seed=7))
+    want = tucker.decompose(x, (3, 3, 2), n_iter=2, method="svd")
+    with pytest.warns(DeprecationWarning, match="hooi_dense is deprecated"):
+        got = hooi_dense(x, (3, 3, 2), n_iter=2, method="svd")
+    np.testing.assert_array_equal(np.asarray(got.core), np.asarray(want.core))
+
+    coo, _ = low_rank_sparse_tensor((12, 12, 12), (2, 2, 2), 0.3, seed=8)
+    want = tucker.decompose(coo, (2, 2, 2), algorithm="complete", n_rounds=2,
+                            n_iter=1, method="gram")
+    with pytest.warns(DeprecationWarning, match="tucker_complete_dense"):
+        got = tucker_complete_dense(coo, (2, 2, 2), n_rounds=2, n_iter=1)
+    np.testing.assert_array_equal(np.asarray(got.core), np.asarray(want.core))

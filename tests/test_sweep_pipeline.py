@@ -270,6 +270,58 @@ def test_xla_engine_needs_no_schedule():
     assert eng.device_schedule(coo, 0) is None
 
 
+# ---------------------------------------------------------------------------
+# 6. TuckerPlan reuse: the serving steady state is zero retraces AND zero
+#    schedule rebuilds (per-call counters on TuckerResult / SweepEngine).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_plan_reuse_zero_retrace_zero_schedule_rebuilds(engine):
+    """Second call of a TuckerPlan on the SAME tensor must hit every cache:
+    zero new traces of the compiled sweep and zero schedule builds/uploads.
+    A DISTINCT same-shape tensor still retraces nothing (schedules alone may
+    rebuild — they are per-tensor data)."""
+    from repro import tucker
+
+    spec = tucker.TuckerSpec(shape=(20, 16, 12), ranks=(3, 3, 2),
+                             method="gram", engine=engine, n_iter=3)
+    p = tucker.plan(spec)
+    coo = random_sparse_tensor(spec.shape, 0.05, seed=51)
+    warm = p(coo)  # may trace + build schedules
+    traces = _total_traces()
+    builds = p.engine.schedule_builds
+    res = p(coo)
+    assert _total_traces() == traces, "same-tensor call retraced the pipeline"
+    assert p.engine.schedule_builds == builds, "same-tensor call rebuilt schedules"
+    assert res.retraces == 0 and res.schedule_builds == 0
+    np.testing.assert_array_equal(res.fit_history, warm.fit_history)
+    # a different tensor of the same shape: zero retraces (the compile cache
+    # is keyed on the spec, not the tensor)
+    coo_b = random_sparse_tensor(spec.shape, 0.05, seed=52)
+    res_b = p(coo_b)
+    assert _total_traces() == traces
+    assert res_b.retraces == 0
+    if engine == "xla":  # plain XLA needs no schedules at all
+        assert res_b.schedule_builds == 0
+
+
+def test_plan_reuse_kron_schedules_cached():
+    """Kron-reuse dedup plans are per-tensor schedules too: cached on the
+    plan's engine, rebuilt only when the tensor changes."""
+    from repro import tucker
+
+    spec = tucker.TuckerSpec(shape=(16, 14, 12), ranks=(3, 3, 2),
+                             method="gram", engine="xla", n_iter=2,
+                             use_kron_reuse=True)
+    p = tucker.plan(spec)
+    coo = random_sparse_tensor(spec.shape, 0.06, seed=53)
+    first = p(coo)
+    assert first.schedule_builds > 0  # dedup plan built + uploaded once
+    res = p(coo)
+    assert res.schedule_builds == 0 and res.retraces == 0
+
+
 def test_rebound_engine_does_not_pin_old_tensor():
     """Satellite regression: after rebinding to a new tensor, the engine must
     not keep the previous tensor's indices (and device buffer) alive."""

@@ -1,0 +1,336 @@
+"""Contract tests for the repro.tucker plan/execute front-end.
+
+Acceptance criteria under test (ISSUE 3):
+
+* a ``TuckerPlan`` called twice on distinct same-shape/same-spec tensors
+  shows 0 retraces and is bit-identical to ``hooi_sparse`` on both engines;
+* ``TuckerPlan.batch`` over k tensors matches k sequential calls;
+* ``use_kron_reuse`` follows one rule on BOTH pipelines (the engine comes
+  from one construction helper) — regression for the old python-pipeline
+  inconsistency;
+* ``TuckerResult`` survives an empty fit history (no ``hist[-1]`` crash).
+"""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import tucker
+from repro.core import engine as E
+from repro.core import hooi
+from repro.core.coo import SparseCOO
+from repro.sparse.generators import random_sparse_tensor
+
+ENGINES = E.available_engines()
+
+
+def _total_traces():
+    return sum(hooi.SWEEP_TRACE_COUNTS.values())
+
+
+def _spec(shape=(20, 16, 12), ranks=(3, 3, 2), **kw):
+    kw.setdefault("method", "gram")
+    kw.setdefault("n_iter", 3)
+    return tucker.TuckerSpec(shape=shape, ranks=ranks, **kw)
+
+
+# ---------------------------------------------------------------------------
+# TuckerSpec: validated once, frozen, hashable.
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="pipeline"):
+        _spec(pipeline="fpga")
+    with pytest.raises(ValueError, match="engine"):
+        _spec(engine="fpga")
+    with pytest.raises(ValueError, match="method"):
+        _spec(method="qr")
+    with pytest.raises(ValueError, match="n_iter"):
+        _spec(n_iter=0)
+    with pytest.raises(ValueError, match="algorithm"):
+        _spec(algorithm="cp")
+    with pytest.raises(ValueError, match="order"):
+        tucker.TuckerSpec(shape=(4, 4, 4), ranks=(2, 2))
+    with pytest.raises(ValueError, match="tol"):
+        _spec(tol=-1.0)
+
+
+def test_spec_normalizes_and_hashes():
+    s = tucker.TuckerSpec(shape=[130, 150], ranks=[30, 35])
+    # the paper's angiogram rank [30,35] clamps to the representable [30,30]
+    assert s.ranks == (30, 30)
+    assert s.shape == (130, 150)
+    assert hash(s) == hash(tucker.TuckerSpec(shape=(130, 150), ranks=(30, 35)))
+    with pytest.raises(Exception):  # frozen
+        s.n_iter = 7
+
+
+def test_spec_dtype_canonicalization():
+    assert _spec().dtype == "auto"
+    assert _spec(dtype=jnp.float32).dtype == "float32"
+    assert _spec(dtype="bfloat16").resolved_dtype() == jnp.bfloat16
+
+
+def test_plan_cache_returns_same_plan():
+    spec = _spec(shape=(10, 8, 6), ranks=(2, 2, 2))
+    assert tucker.plan(spec) is tucker.plan(spec)
+    # a prebuilt engine bypasses the cache and wraps that engine
+    eng = E.make_engine("xla")
+    p = tucker.plan(spec, engine=eng)
+    assert p is not tucker.plan(spec) and p.engine is eng
+
+
+def test_plan_rejects_wrong_shape_and_type():
+    p = tucker.plan(_spec(shape=(10, 8, 6), ranks=(2, 2, 2)))
+    with pytest.raises(ValueError, match="does not match the planned"):
+        p(random_sparse_tensor((10, 8, 7), 0.05, seed=0))
+    with pytest.raises(TypeError, match="SparseCOO"):
+        p(np.zeros((10, 8, 6), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: zero retraces across distinct same-shape tensors, and
+# bit-identical results to the hooi_sparse shim — on every engine.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_plan_zero_retrace_and_bit_parity_with_hooi_sparse(engine):
+    spec = _spec(engine=engine)
+    p = tucker.plan(spec)
+    coo_a = random_sparse_tensor(spec.shape, 0.05, seed=61)
+    coo_b = random_sparse_tensor(spec.shape, 0.05, seed=62)
+    p(coo_a)  # warm: may trace + build schedules
+    traces = _total_traces()
+    res_a = p(coo_a)
+    res_b = p(coo_b)
+    assert _total_traces() == traces, "same-spec call retraced"
+    assert res_a.retraces == 0 and res_b.retraces == 0
+    assert res_a.dispatches == 1  # whole multi-sweep loop is one program
+    for coo, res in ((coo_a, res_a), (coo_b, res_b)):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            ref = hooi.hooi_sparse(coo, spec.ranks, n_iter=spec.n_iter,
+                                   method=spec.method, engine=engine)
+        np.testing.assert_array_equal(np.asarray(res.core), np.asarray(ref.core))
+        for a, b in zip(res.factors, ref.factors):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(res.fit_history, ref.fit_history)
+
+
+# ---------------------------------------------------------------------------
+# batch(): one dispatch for k tensors, matching k sequential calls.
+# ---------------------------------------------------------------------------
+
+
+def test_batch_matches_sequential_xla():
+    spec = _spec()
+    p = tucker.plan(spec)
+    # distinct nnz per tensor: exercises the pad-to-max path
+    coos = [random_sparse_tensor(spec.shape, d, seed=s)
+            for d, s in ((0.05, 71), (0.03, 72), (0.06, 73))]
+    seq = [p(c) for c in coos]
+    d0 = hooi.SWEEP_DISPATCH_COUNTS[("xla", "scan")]
+    got = p.batch(coos)
+    assert hooi.SWEEP_DISPATCH_COUNTS[("xla", "scan")] - d0 == 1  # ONE dispatch
+    assert len(got) == len(seq)
+    for g, s in zip(got, seq):
+        np.testing.assert_array_equal(g.fit_history, s.fit_history)
+        np.testing.assert_allclose(
+            np.asarray(g.core), np.asarray(s.core), rtol=1e-5, atol=1e-5
+        )
+        for fg, fs in zip(g.factors, s.factors):
+            np.testing.assert_allclose(
+                np.asarray(fg), np.asarray(fs), rtol=1e-5, atol=1e-5
+            )
+
+
+def test_batch_second_call_zero_retraces():
+    spec = _spec(shape=(15, 12, 10), ranks=(3, 2, 2))
+    p = tucker.plan(spec)
+    make = lambda s: [random_sparse_tensor(spec.shape, 0.05, seed=s + i)
+                      for i in range(3)]
+    p.batch(make(81))  # warm
+    traces = _total_traces()
+    res = p.batch(make(91))
+    assert _total_traces() == traces
+    assert res[0].retraces == 0
+
+
+def test_batch_with_tol_matches_sequential():
+    spec = _spec(shape=(15, 12, 10), ranks=(3, 2, 2), n_iter=8, tol=1e-3)
+    p = tucker.plan(spec)
+    coos = [random_sparse_tensor(spec.shape, 0.06, seed=s) for s in (95, 96)]
+    seq = [p(c) for c in coos]
+    got = p.batch(coos)
+    for g, s in zip(got, seq):
+        assert g.n_sweeps == s.n_sweeps  # per-tensor early exit preserved
+        np.testing.assert_array_equal(g.fit_history, s.fit_history)
+
+
+@pytest.mark.parametrize(
+    "engine,pipeline,use_kron_reuse",
+    [("pallas", "scan", False), ("xla", "scan", True), ("xla", "python", False)],
+)
+def test_batch_fallback_configs_match_sequential(engine, pipeline, use_kron_reuse):
+    """Configs whose schedules can't share one vmapped program fall back to
+    sequential execution with identical results."""
+    if engine not in ENGINES:
+        pytest.skip("pallas unavailable")
+    spec = _spec(shape=(10, 8, 6), ranks=(2, 2, 2), n_iter=2, engine=engine,
+                 pipeline=pipeline, use_kron_reuse=use_kron_reuse)
+    p = tucker.plan(spec)
+    coos = [random_sparse_tensor(spec.shape, 0.08, seed=s) for s in (85, 86)]
+    seq = [p(c) for c in coos]
+    got = p.batch(coos)
+    for g, s in zip(got, seq):
+        np.testing.assert_array_equal(np.asarray(g.core), np.asarray(s.core))
+
+
+def test_batch_rejects_mixed_shapes_and_dense_specs():
+    p = tucker.plan(_spec(shape=(10, 8, 6), ranks=(2, 2, 2)))
+    with pytest.raises(ValueError, match="does not match the planned"):
+        p.batch([random_sparse_tensor((10, 8, 6), 0.05, seed=1),
+                 random_sparse_tensor((10, 8, 7), 0.05, seed=2)])
+    pd = tucker.plan(_spec(shape=(10, 8, 6), ranks=(2, 2, 2), algorithm="dense"))
+    with pytest.raises(ValueError, match="algorithm='sparse'"):
+        pd.batch([])
+
+
+# ---------------------------------------------------------------------------
+# Satellite: use_kron_reuse follows ONE rule on both pipelines (regression
+# for the python-pipeline "reuse only when an engine happens to exist" bug).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pipeline", ["scan", "python"])
+def test_kron_reuse_actually_taken_on_both_pipelines(pipeline):
+    spec = _spec(shape=(16, 14, 12), ranks=(3, 3, 2), engine="xla",
+                 pipeline=pipeline, use_kron_reuse=True)
+    p = tucker.plan(spec)
+    assert p.engine.use_kron_reuse  # one helper, one rule
+    coo = random_sparse_tensor(spec.shape, 0.06, seed=55)
+    res = p(coo)
+    # the reuse path really ran: the engine built a dedup plan per mode
+    assert sorted(p.engine.kron_plans) == [0, 1, 2]
+    assert res.schedule_builds > 0
+    # and it changed nothing numerically vs the non-reuse plan
+    plain = tucker.plan(_spec(shape=spec.shape, ranks=spec.ranks, engine="xla",
+                              pipeline=pipeline))(coo)
+    np.testing.assert_allclose(res.fit_history, plain.fit_history, atol=1e-5)
+
+
+def test_kron_reuse_pipelines_agree():
+    spec_kw = dict(shape=(16, 14, 12), ranks=(3, 3, 2), engine="xla",
+                   use_kron_reuse=True)
+    coo = random_sparse_tensor((16, 14, 12), 0.06, seed=56)
+    a = tucker.plan(_spec(pipeline="python", **spec_kw))(coo)
+    b = tucker.plan(_spec(pipeline="scan", **spec_kw))(coo)
+    np.testing.assert_allclose(a.fit_history, b.fit_history, atol=1e-5)
+
+
+def test_prebuilt_engine_reuse_mismatch_warns_both_ways():
+    spec = _spec(shape=(10, 8, 6), ranks=(2, 2, 2), use_kron_reuse=True,
+                 engine="xla")
+    eng = E.make_engine("xla")  # built WITHOUT reuse
+    with pytest.warns(RuntimeWarning, match="use_kron_reuse=True is ignored"):
+        tucker.plan(spec, engine=eng)
+    # and the mirror direction: a reuse engine overriding a non-reuse spec
+    spec_plain = _spec(shape=(10, 8, 6), ranks=(2, 2, 2), engine="xla")
+    eng_reuse = E.make_engine("xla", use_kron_reuse=True)
+    with pytest.warns(RuntimeWarning, match="overrides use_kron_reuse=False"):
+        tucker.plan(spec_plain, engine=eng_reuse)
+
+
+def test_factors_init_survives_donation():
+    """Caller-supplied warm-start factors must not be deleted by the donating
+    compiled pipeline — a warm-start loop reuses its seed factors."""
+    spec = _spec(shape=(12, 10, 8), ranks=(2, 2, 2))
+    p = tucker.plan(spec)
+    coo = random_sparse_tensor(spec.shape, 0.05, seed=63)
+    fs = hooi.init_factors(spec.shape, spec.ranks, jax.random.PRNGKey(1))
+    a = p(coo, factors_init=fs)
+    b = p(coo, factors_init=fs)  # would raise 'Array has been deleted' before
+    np.testing.assert_array_equal(a.fit_history, b.fit_history)
+    assert np.isfinite(float(jnp.sum(fs[0])))  # seed factors still alive
+
+
+# ---------------------------------------------------------------------------
+# Satellite: empty fit history must not crash result construction.
+# ---------------------------------------------------------------------------
+
+
+def test_result_from_empty_history():
+    res = tucker.TuckerResult.from_history(
+        jnp.zeros((2, 2)), [], np.asarray([]), engine="xla"
+    )
+    assert res.n_sweeps == 0
+    assert np.isnan(float(res.rel_error))
+    assert res.fit_history.size == 0
+
+
+def test_driver_survives_all_masked_history(monkeypatch):
+    """If every sweep were masked (all-sentinel history), the plan returns an
+    empty history and NaN rel_error instead of IndexError on hist[-1]."""
+    spec = _spec(shape=(10, 8, 6), ranks=(2, 2, 2), engine="xla")
+    p = tucker.plan(spec)
+    coo = random_sparse_tensor(spec.shape, 0.05, seed=57)
+    p(coo)  # warm, sanity
+    monkeypatch.setattr(
+        hooi, "_fetch_history",
+        lambda x: np.full_like(np.asarray(jax.device_get(x)), hooi._SKIPPED),
+    )
+    res = p(coo)
+    assert res.n_sweeps == 0 and np.isnan(float(res.rel_error))
+
+
+# ---------------------------------------------------------------------------
+# TuckerResult metadata + dense/complete algorithms through the front-end.
+# ---------------------------------------------------------------------------
+
+
+def test_result_metadata_fields():
+    spec = _spec(shape=(20, 16, 12), ranks=(3, 3, 2))
+    res = tucker.plan(spec)(random_sparse_tensor(spec.shape, 0.05, seed=58))
+    assert res.spec == spec  # the cached plan's spec (equal, maybe not identical)
+    from repro.core.reconstruct import compression_ratio
+
+    assert res.compression_ratio == pytest.approx(
+        compression_ratio(spec.shape, spec.ranks)
+    )
+    assert res.n_sweeps == len(res.fit_history) == spec.n_iter
+    assert res.engine in ("xla", "pallas")
+
+
+def test_plan_stats_accumulate():
+    spec = _spec(shape=(12, 10, 8), ranks=(2, 2, 2), pipeline="python")
+    p = tucker.plan(spec)
+    coo = random_sparse_tensor(spec.shape, 0.05, seed=59)
+    p(coo)
+    p(coo)
+    assert p.stats.calls == 2
+    assert p.stats.dispatches == 2 * spec.n_iter  # python driver: 1/sweep
+
+
+def test_dense_plan_warm_start():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((10, 9, 8)).astype(np.float32))
+    p = tucker.plan(_spec(shape=(10, 9, 8), ranks=(3, 2, 2), algorithm="dense",
+                          method="svd", n_iter=2))
+    cold = p(x)
+    warm = p(x, factors_init=cold.factors)
+    assert float(warm.rel_error) <= float(cold.rel_error) + 1e-6
+
+
+def test_decompose_infers_algorithm():
+    coo = random_sparse_tensor((10, 8, 6), 0.08, seed=60)
+    rs = tucker.decompose(coo, (2, 2, 2), n_iter=2, method="gram")
+    assert rs.spec.algorithm == "sparse"
+    rd = tucker.decompose(coo.to_dense(), (2, 2, 2), n_iter=2, method="gram")
+    assert rd.spec.algorithm == "dense"
+    np.testing.assert_allclose(
+        float(rs.rel_error), float(rd.rel_error), atol=1e-4
+    )
