@@ -1,0 +1,224 @@
+"""TuckerService benchmark (micro-batching vs sequential) -> BENCH_serve.json.
+
+Times the serving plane end-to-end: N mixed-nnz decomposition requests
+through a ``TuckerService`` at several ``max_batch`` settings, against the
+baseline every caller wrote before the service existed — a sequential
+``tucker.decompose`` loop (one warm plan call per request). Records, per
+batch size, throughput, p50/p99 end-to-end latency, and the dispatch count,
+i.e. the amortization trajectory every future serving PR is measured
+against:
+
+  BENCH_serve.json = {
+    "benchmark": "serve_bench", "smoke": bool, "jax": .., "backend": ..,
+    "workload": {"shape", "ranks", "method", "n_iter", "n_requests",
+                  "nnz_values", "bucket"},
+    "sequential": {"total_s", "throughput_rps", "p50_ms", "p99_ms",
+                    "dispatches"},
+    "cases": [{
+       "max_batch", "total_s", "throughput_rps",
+       "speedup_vs_sequential",        # service rps / sequential rps
+       "p50_ms", "p99_ms",             # end-to-end submit->result latency
+       "dispatches", "dispatch_bound", # bound = ceil(N / max_batch)
+       "requests_per_dispatch", "flushes", "padding_overhead",
+       "parity_max_core_diff",         # service vs sequential results
+    }, ...]
+  }
+
+Acceptance gates (exit nonzero on violation; CI runs ``--smoke``):
+
+  * parity: every service result allclose (1e-4) to its sequential twin;
+  * amortization: dispatches <= ceil(N / max_batch) for every batched case;
+  * throughput: >= 2x the sequential loop at max_batch >= 8 (XLA engine).
+
+    PYTHONPATH=src:. python benchmarks/serve_bench.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+from typing import Optional
+
+import numpy as np
+
+
+def build_workload(smoke: bool):
+    """Mixed-nnz requests that still share ONE nnz bucket: the dispatch gate
+    below (ceil(N / max_batch)) assumes one queue, so the bucket base is
+    chosen to cover the largest request. n_requests is a multiple of every
+    benchmarked batch size, so steady-state flushes are all 'full'."""
+    from repro import tucker
+    from repro.sparse.generators import random_sparse_tensor
+
+    spec = tucker.TuckerSpec(
+        shape=(20, 16, 12), ranks=(3, 3, 2), method="gram", n_iter=3
+    )
+    n_requests = 48 if smoke else 192
+    densities = [0.02, 0.03, 0.04]  # ragged nnz; one shared bucket, sized below
+    coos = [
+        random_sparse_tensor(spec.shape, densities[i % len(densities)],
+                             seed=1000 + i)
+        for i in range(n_requests)
+    ]
+    return spec, coos
+
+
+def bench_sequential(spec, coos, plan) -> dict:
+    """The baseline loop: one warm ``plan(coo)`` call per request."""
+    from repro.core import hooi
+
+    lat = []
+    d0 = sum(hooi.SWEEP_DISPATCH_COUNTS.values())
+    t_start = time.perf_counter()
+    results = []
+    for c in coos:
+        t0 = time.perf_counter()
+        results.append(plan(c))
+        lat.append((time.perf_counter() - t0) * 1e3)
+    total = time.perf_counter() - t_start
+    return {
+        "total_s": total,
+        "throughput_rps": len(coos) / total,
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "dispatches": sum(hooi.SWEEP_DISPATCH_COUNTS.values()) - d0,
+    }, results
+
+
+def bench_service(spec, coos, max_batch: int, bucket_base: int) -> dict:
+    from repro.serve import ServiceConfig, TuckerService
+
+    cfg = ServiceConfig(
+        max_batch=max_batch,
+        # generous: the submit burst lands whole, so every steady-state
+        # flush is 'full' — the tail (N % max_batch == 0) included.
+        max_wait_ms=200.0,
+        bucket_base=bucket_base,
+    )
+    with TuckerService(cfg) as svc:
+        t_start = time.perf_counter()
+        tickets = [svc.submit_coo(c, spec) for c in coos]
+        results = [t.result(timeout=600) for t in tickets]
+        total = time.perf_counter() - t_start
+        snap = svc.metrics.snapshot()
+    lat = [r.timing.total_ms for r in results]
+    return {
+        "max_batch": max_batch,
+        "total_s": total,
+        "throughput_rps": len(coos) / total,
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "dispatches": snap["dispatches"],
+        "dispatch_bound": math.ceil(len(coos) / max_batch),
+        "requests_per_dispatch": snap["requests_per_dispatch"],
+        "flushes": snap["flushes"],
+        "padding_overhead": snap["padding_overhead"],
+    }, results
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer requests / batch sizes (CI gate)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro import tucker
+    from repro.sparse.layout import bucket_nnz
+
+    spec, coos = build_workload(args.smoke)
+    nnz_values = sorted({c.nnz for c in coos})
+    # one bucket sized to the workload: covers every request (so the dispatch
+    # bound holds) without the up-to-growth-x padded compute a mis-sized
+    # bucket base costs — the tuning note the README's serving section makes.
+    bucket_base = bucket_nnz(max(nnz_values), base=max(nnz_values))
+    batch_sizes = (4, 8) if args.smoke else (2, 4, 8, 16)
+    assert all(len(coos) % b == 0 for b in batch_sizes)
+
+    plan = tucker.plan(spec)
+    for c in coos[: len(nnz_values) * 2]:
+        plan(c)  # warm the per-nnz sequential programs
+    seq, seq_results = bench_sequential(spec, coos, plan)
+    print(
+        f"sequential: {seq['throughput_rps']:8.1f} req/s "
+        f"p50={seq['p50_ms']:.2f}ms p99={seq['p99_ms']:.2f}ms "
+        f"dispatches={seq['dispatches']}",
+        flush=True,
+    )
+
+    cases = []
+    failures = []
+    for b in batch_sizes:
+        # warmup pass compiles the (k=b, bucket) program outside the timing
+        _case, _ = bench_service(spec, coos[: 2 * b], b, bucket_base)
+        case, results = bench_service(spec, coos, b, bucket_base)
+        case["speedup_vs_sequential"] = (
+            case["throughput_rps"] / seq["throughput_rps"]
+        )
+        diffs = [
+            float(np.abs(np.asarray(r.core) - np.asarray(s.core)).max())
+            for r, s in zip(results, seq_results)
+        ]
+        case["parity_max_core_diff"] = max(diffs)
+        cases.append(case)
+        print(
+            f"max_batch={b:3d}: {case['throughput_rps']:8.1f} req/s "
+            f"({case['speedup_vs_sequential']:4.2f}x) "
+            f"p50={case['p50_ms']:.2f}ms p99={case['p99_ms']:.2f}ms "
+            f"dispatches={case['dispatches']}/{case['dispatch_bound']} "
+            f"pad={case['padding_overhead']:.2f}x",
+            flush=True,
+        )
+        if case["parity_max_core_diff"] > 1e-4:
+            failures.append(
+                f"max_batch={b}: parity violation "
+                f"(max core diff {case['parity_max_core_diff']:.2e})"
+            )
+        if case["dispatches"] > case["dispatch_bound"]:
+            failures.append(
+                f"max_batch={b}: {case['dispatches']} dispatches > bound "
+                f"{case['dispatch_bound']} (micro-batching regressed)"
+            )
+        if b >= 8 and case["speedup_vs_sequential"] < 2.0:
+            failures.append(
+                f"max_batch={b}: {case['speedup_vs_sequential']:.2f}x < 2x "
+                f"sequential throughput (amortization regressed)"
+            )
+
+    payload = {
+        "benchmark": "serve_bench",
+        "smoke": bool(args.smoke),
+        "created_unix": int(time.time()),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "workload": {
+            "shape": list(spec.shape),
+            "ranks": list(spec.ranks),
+            "method": spec.method,
+            "n_iter": spec.n_iter,
+            "n_requests": len(coos),
+            "nnz_values": nnz_values,
+            "bucket": bucket_base,
+        },
+        "sequential": seq,
+        "cases": cases,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(cases)} cases)")
+
+    if failures:
+        print("SERVE BENCH GATE FAILURES:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

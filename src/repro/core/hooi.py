@@ -313,24 +313,39 @@ _scan_sweeps = partial(
 )(_scan_sweeps_impl)
 
 
-@partial(jax.jit, static_argnames=("shape", "ranks", "method", "n_iter"))
+@partial(jax.jit, static_argnames=("shape", "ranks", "method", "n_iter", "dtype"))
 def _batched_scan_sweeps(
-    indices, values, factors, xnorm2, tol, *, shape, ranks, method, n_iter
+    indices, values, keys, tol, *, shape, ranks, method, n_iter, dtype=None
 ):
-    """The whole multi-sweep program vmapped over a leading batch of
-    same-shape, nnz-padded sparse tensors — ``TuckerPlan.batch``'s one XLA
-    dispatch for k decompositions. Plain-XLA engine only: Pallas / Kron-reuse
-    schedules are per-tensor pytrees of data-dependent size and cannot share
-    one batched program."""
+    """The whole batched decomposition — random factor init, norm, and the
+    multi-sweep loop — vmapped over a leading batch of same-shape, nnz-padded
+    sparse tensors: ``TuckerPlan.batch``'s (and the serving flush path's) one
+    XLA dispatch for k decompositions. The init/norm preamble is fused INTO
+    the program on purpose: run eagerly it costs several small dispatches per
+    flush, which on CPU dwarfs the batched sweep itself and erases the
+    amortization a micro-batching service exists to deliver. Plain-XLA engine
+    only: Pallas / Kron-reuse schedules are per-tensor pytrees of
+    data-dependent size and cannot share one batched program."""
 
-    def one(idx, val, fs, xn):
+    def one(idx, val, key):
+        fs = tuple(init_factors(shape, ranks, key, dtype=dtype))
+        # identical formula to the per-tensor path (square of the norm), so
+        # batched results are bit-compatible with sequential calls.
+        xn = jnp.square(jnp.sqrt(jnp.sum(jnp.square(val.astype(jnp.float32)))))
         return _scan_sweeps_impl(
             idx, val, fs, xn, tol, None,
             shape=shape, ranks=ranks, method=method, n_iter=n_iter,
             engine_name="xla", interpret=False, use_reuse=False,
         )
 
-    return jax.vmap(one)(indices, values, factors, xnorm2)
+    fs, core, hist = jax.vmap(one)(indices, values, keys)
+    # split per-member outputs INSIDE the program: k separate result buffers
+    # fall out of the one dispatch, instead of 4k eager slice dispatches on
+    # the host afterwards (which would out-cost the batched sweep on CPU).
+    k = indices.shape[0]
+    cores = tuple(core[i] for i in range(k))
+    factors = tuple(tuple(f[i] for f in fs) for i in range(k))
+    return cores, factors, hist
 
 
 def hooi_sparse(

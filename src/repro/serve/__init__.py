@@ -1,0 +1,27 @@
+"""repro.serve — the host-side serving planes.
+
+Two serving planes live here, mirroring the paper's CPU/accelerator split
+(the CPU aggregates and schedules, the device runs saturated batches):
+
+* :mod:`repro.serve.tucker_service` — the micro-batching Tucker
+  decomposition service (``TuckerService``): independent ``submit()``
+  requests are grouped by (spec, nnz bucket) and flushed as single batched
+  ``TuckerPlan.batch`` dispatches.
+* :mod:`repro.serve.engine` — the LM token-serving engine (prefill/decode
+  continuous batching). Import it explicitly; it pulls in the full model
+  stack, which this package init deliberately does not.
+"""
+from repro.serve.batching import BatchKey, Flush, MicroBatcher
+from repro.serve.metrics import LatencyTracker, ServiceMetrics
+from repro.serve.tucker_service import ServiceConfig, TuckerService, TuckerTicket
+
+__all__ = [
+    "BatchKey",
+    "Flush",
+    "LatencyTracker",
+    "MicroBatcher",
+    "ServiceConfig",
+    "ServiceMetrics",
+    "TuckerService",
+    "TuckerTicket",
+]

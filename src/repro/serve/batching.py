@@ -1,0 +1,129 @@
+"""Micro-batching queue plane of the Tucker decomposition service.
+
+The paper's hybrid platform keeps the accelerator saturated by letting the
+CPU aggregate work into full dataflow batches before streaming them to the
+FPGA (Sec. III-B); this module is that host-side aggregation, made explicit:
+requests land in per-:class:`BatchKey` queues — one queue per (spec, nnz
+bucket), because only same-spec, same-padded-shape tensors can ride one
+compiled batched program — and a flush pops up to ``max_batch`` of them the
+moment a queue fills or its oldest request has waited ``max_wait_s``.
+
+Pure data structure, no threads, no jax: the service holds its lock around
+every call, and the deterministic tests drive it with a fake clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from repro.tucker.spec import TuckerSpec
+
+# why a batch left its queue (RequestTiming.flush_reason / metrics label)
+FLUSH_FULL = "full"  # queue reached max_batch
+FLUSH_TIMEOUT = "timeout"  # oldest member waited max_wait_s
+FLUSH_DRAIN = "drain"  # explicit flush() / service close
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchKey:
+    """What must match for requests to share one batched dispatch: the whole
+    (hashable) spec, the common padded-nnz bucket, and the working value
+    dtype — the compiled batched program is keyed on all three. For a
+    concrete spec dtype every request lands on that dtype (the plan casts);
+    under dtype='auto' the observed input dtype routes, so one flush never
+    mixes precisions (which would silently promote the narrow members)."""
+
+    spec: TuckerSpec
+    bucket: int  # padded nnz target (a repro.sparse.layout.bucket_nnz boundary)
+    dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class Flush:
+    """One popped micro-batch, ready to execute as a single dispatch."""
+
+    key: BatchKey
+    items: Tuple[Any, ...]
+    reason: str  # FLUSH_FULL / FLUSH_TIMEOUT / FLUSH_DRAIN
+
+
+class MicroBatcher:
+    """Per-key FIFO queues with a full-or-timeout flush policy.
+
+    Not thread-safe by design — the owner serializes access (the service
+    wraps every call in its condition-variable lock). Time is an argument,
+    never read from a clock, so flush decisions are exactly reproducible.
+    """
+
+    def __init__(self, max_batch: int, max_wait_s: float):
+        if int(max_batch) < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if not float(max_wait_s) >= 0.0:  # also rejects NaN
+            raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        # insertion-ordered so pop scans oldest-created queues first (fairness
+        # between keys under sustained load).
+        self._queues: "OrderedDict[BatchKey, Deque[Tuple[float, Any]]]" = (
+            OrderedDict()
+        )
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def depth(self, key: BatchKey) -> int:
+        q = self._queues.get(key)
+        return 0 if q is None else len(q)
+
+    def add(self, key: BatchKey, item: Any, now: float) -> int:
+        """Enqueue one request; returns the queue's new depth."""
+        q = self._queues.get(key)
+        if q is None:
+            q = self._queues[key] = deque()
+        q.append((now, item))
+        return len(q)
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest instant any queue becomes flushable by timeout (its
+        oldest enqueue + ``max_wait_s``); ``None`` when everything is empty.
+        A full queue's deadline is *now* — callers re-check ``pop_ready``."""
+        deadlines = [q[0][0] + self.max_wait_s for q in self._queues.values() if q]
+        return min(deadlines) if deadlines else None
+
+    def pop_ready(self, now: float) -> Optional[Flush]:
+        """Pop ONE flushable micro-batch. Queues whose oldest request has
+        waited past ``max_wait_s`` go first, earliest deadline first —
+        otherwise sustained traffic that keeps one key's queue full would
+        starve every other key past its latency bound. With no deadline
+        expired, any full queue pops immediately (it saturates a dispatch —
+        no reason to wait)."""
+        due = [
+            (q[0][0], key)
+            for key, q in self._queues.items()
+            if q and now - q[0][0] >= self.max_wait_s
+        ]
+        if due:
+            # key= guards timestamp ties: BatchKey itself is unordered, and
+            # a bare tuple-min would fall through to comparing keys and raise.
+            _, key = min(due, key=lambda d: d[0])
+            full = len(self._queues[key]) >= self.max_batch
+            return self._pop(key, FLUSH_FULL if full else FLUSH_TIMEOUT)
+        for key, q in self._queues.items():
+            if len(q) >= self.max_batch:
+                return self._pop(key, FLUSH_FULL)
+        return None
+
+    def pop_any(self) -> Optional[Flush]:
+        """Pop ONE micro-batch regardless of readiness (drain/close path)."""
+        for key, q in self._queues.items():
+            if q:
+                return self._pop(key, FLUSH_DRAIN)
+        return None
+
+    def _pop(self, key: BatchKey, reason: str) -> Flush:
+        q = self._queues[key]
+        items = tuple(q.popleft()[1] for _ in range(min(len(q), self.max_batch)))
+        if not q:
+            del self._queues[key]  # keys churn; don't accumulate empties
+        return Flush(key=key, items=items, reason=reason)

@@ -1,0 +1,168 @@
+"""Service observability: latency percentiles + amortization counters.
+
+The whole point of the micro-batching plane is amortization — many requests
+per XLA dispatch — so the metrics a ``TuckerService`` keeps are exactly the
+ones that prove (or disprove) it: dispatch count vs. request count, flush
+reasons (did batches fill, or did the timeout fire half-empty?), achieved
+batch sizes, padding overhead from nnz bucketing, and queue/execute/total
+latency distributions (p50/p99). Thread-safe; ``snapshot()`` returns plain
+dicts for JSON benchmarks and CI gates.
+"""
+from __future__ import annotations
+
+import threading
+from collections import Counter, deque
+from typing import Deque, Dict, Optional, Sequence
+
+import numpy as np
+
+
+class LatencyTracker:
+    """Bounded reservoir of latency samples (milliseconds) with percentile
+    summaries. A plain ``deque(maxlen=...)`` reservoir: a service soak cares
+    about the *recent* distribution, and a hard bound keeps a long-lived
+    process from growing an unbounded sample list."""
+
+    def __init__(self, maxlen: int = 8192):
+        self._samples: Deque[float] = deque(maxlen=maxlen)
+        self.count = 0  # lifetime observations (reservoir may hold fewer)
+
+    def observe(self, ms: float) -> None:
+        self._samples.append(float(ms))
+        self.count += 1
+
+    def percentile(self, p: float) -> float:
+        """p-th percentile of the retained samples; NaN when empty."""
+        if not self._samples:
+            return float("nan")
+        return float(np.percentile(np.asarray(self._samples), p))
+
+    def summary(self) -> Dict[str, float]:
+        if not self._samples:
+            return {"count": 0, "p50_ms": float("nan"), "p99_ms": float("nan"),
+                    "mean_ms": float("nan"), "max_ms": float("nan")}
+        arr = np.asarray(self._samples)
+        return {
+            "count": int(self.count),
+            "p50_ms": float(np.percentile(arr, 50)),
+            "p99_ms": float(np.percentile(arr, 99)),
+            "mean_ms": float(arr.mean()),
+            "max_ms": float(arr.max()),
+        }
+
+
+class ServiceMetrics:
+    """Counters + latency trackers for one :class:`TuckerService`.
+
+    Everything mutates under one lock; reads take consistent snapshots. The
+    derived numbers the acceptance gates read:
+
+      * ``requests_per_dispatch`` — the amortization factor (>> 1 is the
+        service earning its keep; 1.0 is a sequential loop in disguise);
+      * ``padding_overhead`` — padded nnz slots / real nnz (the price of
+        bucketing: at most the bucket growth factor for requests at or
+        above the bucket base, up to ``base / nnz`` for smaller ones);
+      * latency summaries for queue wait, batched execute, and end-to-end.
+    """
+
+    def __init__(self, latency_window: int = 8192):
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.flushes: Counter = Counter()  # reason -> count
+        self.dispatches = 0  # top-level XLA dispatches issued by flushes
+        self.batch_size_sum = 0
+        self.batch_size_max = 0
+        self.nnz_real_sum = 0
+        self.nnz_padded_sum = 0
+        self.plan_evictions = 0  # global plan-cache evictions observed
+        self.queue = LatencyTracker(latency_window)
+        self.execute = LatencyTracker(latency_window)
+        self.total = LatencyTracker(latency_window)
+
+    # -- recording (called by the service) ---------------------------------
+
+    def on_submit(self, n: int = 1) -> None:
+        with self._lock:
+            self.submitted += n
+
+    def on_flush(
+        self,
+        reason: str,
+        batch_size: int,
+        dispatches: int,
+        nnz_real: int,
+        nnz_padded: int,
+        execute_ms: float,
+        queue_ms: Sequence[float],
+        total_ms: Sequence[float],
+    ) -> None:
+        with self._lock:
+            self.flushes[reason] += 1
+            self.dispatches += int(dispatches)
+            self.completed += int(batch_size)
+            self.batch_size_sum += int(batch_size)
+            self.batch_size_max = max(self.batch_size_max, int(batch_size))
+            self.nnz_real_sum += int(nnz_real)
+            self.nnz_padded_sum += int(nnz_padded)
+            self.execute.observe(execute_ms)
+            for q in queue_ms:
+                self.queue.observe(q)
+            for t in total_ms:
+                self.total.observe(t)
+
+    def on_failure(self, batch_size: int) -> None:
+        with self._lock:
+            self.failed += int(batch_size)
+
+    def on_plan_eviction(self) -> None:
+        with self._lock:
+            self.plan_evictions += 1
+
+    # -- derived -----------------------------------------------------------
+
+    # unlocked formula helpers: the one definition each, shared by the
+    # public accessors and snapshot() (whose non-reentrant lock is already
+    # held when it needs them)
+    def _requests_per_dispatch(self) -> float:
+        return self.completed / self.dispatches if self.dispatches else 0.0
+
+    def _padding_overhead(self) -> float:
+        if not self.nnz_real_sum:
+            return float("nan")
+        return self.nnz_padded_sum / self.nnz_real_sum
+
+    def requests_per_dispatch(self) -> float:
+        with self._lock:
+            return self._requests_per_dispatch()
+
+    def padding_overhead(self) -> float:
+        """padded/real nnz slot ratio (>= 1.0; 1.0 means zero waste)."""
+        with self._lock:
+            return self._padding_overhead()
+
+    def snapshot(self) -> dict:
+        """Consistent JSON-ready view of every counter and distribution."""
+        with self._lock:
+            flushes = dict(self.flushes)
+            n_flushes = sum(flushes.values())
+            snap = {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "pending": self.submitted - self.completed - self.failed,
+                "dispatches": self.dispatches,
+                "flushes": flushes,
+                "requests_per_dispatch": self._requests_per_dispatch(),
+                "batch_size_mean": (
+                    self.batch_size_sum / n_flushes if n_flushes else 0.0
+                ),
+                "batch_size_max": self.batch_size_max,
+                "plan_evictions": self.plan_evictions,
+                "padding_overhead": self._padding_overhead(),
+                "queue": self.queue.summary(),
+                "execute": self.execute.summary(),
+                "total": self.total.summary(),
+            }
+        return snap

@@ -1,0 +1,451 @@
+"""TuckerService — the micro-batching Tucker decomposition service.
+
+The paper's hybrid platform wins by division of labor: the CPU aggregates
+and schedules, the accelerator runs saturated batched TTM/Kron pipelines.
+``repro.tucker`` already has the device half (``TuckerPlan.batch``: one XLA
+dispatch decomposes k nnz-padded tensors); this module is the host half that
+feeds it. Callers ``submit()`` independent decomposition requests and get a
+future-style :class:`TuckerTicket` back; a scheduler thread groups compatible
+requests — same :class:`~repro.tucker.spec.TuckerSpec`, same
+``bucket_nnz`` boundary — into micro-batches and flushes each as ONE batched
+dispatch the moment a queue holds ``max_batch`` requests or its oldest
+request has waited ``max_wait_ms``.
+
+Amortization contract (asserted by ``benchmarks/serve_bench.py`` and the
+``serve_soak`` CI gate): under load, dispatches ≈ requests / max_batch, and
+every result carries a :class:`~repro.tucker.result.RequestTiming` showing
+where its wall-clock went (queue wait vs. shared batched execute).
+
+    with TuckerService(ServiceConfig(max_batch=8, max_wait_ms=2.0)) as svc:
+        tickets = [svc.submit(idx, vals, spec) for idx, vals in requests]
+        results = [t.result() for t in tickets]   # TuckerResult each
+
+Synchronous API, internally queued: ``submit`` never blocks on device work;
+``TuckerTicket.result()`` blocks until the request's batch has executed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import warnings
+from typing import List, Optional, Sequence, Set
+
+from repro.core.coo import SparseCOO
+from repro.serve.batching import BatchKey, Flush, MicroBatcher
+from repro.serve.metrics import ServiceMetrics
+from repro.sparse.layout import bucket_nnz
+from repro.tucker.result import RequestTiming, TuckerResult
+from repro.tucker.spec import TuckerSpec
+
+__all__ = ["ServiceConfig", "TuckerService", "TuckerTicket"]
+
+
+# The plan-cache capacity knob is process-global, but services come and go:
+# this registry tracks which live services installed a capacity, so closing
+# one never loosens the bound a still-running service relies on. The newest
+# live holder's capacity rules; when the last holder closes, the capacity
+# observed before ANY service touched it comes back.
+_CAPACITY_LOCK = threading.Lock()
+_CAPACITY_HOLDERS: List["TuckerService"] = []
+_CAPACITY_BASELINE: Optional[int] = None
+_CAPACITY_VERSION: Optional[int] = None  # cache version of OUR last install
+
+
+def _install_capacity(svc: "TuckerService") -> None:
+    from repro import tucker
+
+    global _CAPACITY_BASELINE, _CAPACITY_VERSION
+    with _CAPACITY_LOCK:
+        if not _CAPACITY_HOLDERS:
+            _CAPACITY_BASELINE = tucker.plan_cache_info()["capacity"]
+        _CAPACITY_HOLDERS.append(svc)
+        tucker.set_plan_cache_capacity(svc.config.plan_cache_capacity)
+        _CAPACITY_VERSION = tucker.plan_cache_info()["capacity_version"]
+
+
+def _uninstall_capacity(svc: "TuckerService") -> None:
+    from repro import tucker
+
+    global _CAPACITY_VERSION
+    with _CAPACITY_LOCK:
+        if svc not in _CAPACITY_HOLDERS:
+            return
+        _CAPACITY_HOLDERS.remove(svc)
+        if tucker.plan_cache_info()["capacity_version"] != _CAPACITY_VERSION:
+            # someone called set_plan_cache_capacity() manually since our
+            # install (detected by version, so even re-setting the SAME
+            # value counts) — their bound wins, don't clobber it
+            return
+        if _CAPACITY_HOLDERS:
+            tucker.set_plan_cache_capacity(
+                _CAPACITY_HOLDERS[-1].config.plan_cache_capacity
+            )
+            _CAPACITY_VERSION = tucker.plan_cache_info()["capacity_version"]
+        else:
+            tucker.set_plan_cache_capacity(_CAPACITY_BASELINE)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Tuning knobs of one :class:`TuckerService`.
+
+    Attributes:
+      max_batch: flush a queue the moment it holds this many requests (the
+        batched program's leading axis; also the amortization ceiling).
+      max_wait_ms: flush a non-full queue once its oldest request has waited
+        this long — the latency bound a trickle of traffic pays for
+        batching. 0 flushes on every scheduler wakeup (minimum latency,
+        batches only form within one submit burst).
+      bucket_base / bucket_growth: the ``repro.sparse.layout.bucket_nnz``
+        grid requests are padded to. Coarser growth => fewer compiled
+        programs and bigger shared batches, but up to (growth-1)x padded
+        slots of wasted stream bandwidth.
+      plan_cache_capacity: if set, bound the global plan cache (LRU) so a
+        long-lived service cannot pin every compiled program + device
+        schedule it has ever seen (``tucker.set_plan_cache_capacity``). The
+        knob is process-global: the newest live service's capacity rules,
+        and the pre-service capacity returns when the last one closes.
+      latency_window: samples retained per latency distribution.
+    """
+
+    max_batch: int = 8
+    max_wait_ms: float = 2.0
+    bucket_base: int = 512
+    bucket_growth: float = 2.0
+    plan_cache_capacity: Optional[int] = None
+    latency_window: int = 8192
+
+
+class TuckerTicket:
+    """Future-style handle for one submitted request. Deliberately NOT a
+    ``concurrent.futures.Future``: requests are never cancellable once
+    queued (a flush takes its whole batch), so the Future cancel/running
+    state machine would be dead API surface here."""
+
+    def __init__(self):
+        self._done = threading.Event()
+        self._result: Optional[TuckerResult] = None
+        self._exception: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> TuckerResult:
+        """Block until the request's batch executed; raise its error if the
+        batch failed, ``TimeoutError`` if ``timeout`` elapsed first."""
+        if not self._done.wait(timeout):
+            raise TimeoutError("TuckerService request not done within timeout")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        if not self._done.wait(timeout):
+            raise TimeoutError("TuckerService request not done within timeout")
+        return self._exception
+
+    # -- service-side completion ------------------------------------------
+
+    def _set_result(self, result: TuckerResult) -> None:
+        self._result = result
+        self._done.set()
+
+    def _set_exception(self, exc: BaseException) -> None:
+        self._exception = exc
+        self._done.set()
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One queued request (internal)."""
+
+    coo: SparseCOO
+    key: Optional[object]  # per-request PRNG key for factor init (or None)
+    ticket: TuckerTicket
+    submitted_at: float
+
+
+class TuckerService:
+    """Synchronous-API, internally queued micro-batching decomposition
+    service. See the module docstring for the architecture; thread-safe:
+    any number of threads may ``submit`` concurrently.
+    """
+
+    def __init__(self, config: Optional[ServiceConfig] = None):
+        self.config = config or ServiceConfig()
+        self.metrics = ServiceMetrics(latency_window=self.config.latency_window)
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._batcher = MicroBatcher(
+            max_batch=self.config.max_batch,
+            max_wait_s=self.config.max_wait_ms / 1e3,
+        )
+        self._closing = False
+        self._closed = False
+        self._drain_on_close = True
+        self._warned_specs: Set[TuckerSpec] = set()
+        self._remove_eviction_hook = None
+        if self.config.plan_cache_capacity is not None:
+            from repro import tucker
+
+            _install_capacity(self)
+            self._remove_eviction_hook = tucker.add_plan_eviction_hook(
+                self._on_plan_evicted
+            )
+        self._scheduler = threading.Thread(
+            target=self._scheduler_loop, name="tucker-service-scheduler",
+            daemon=True,
+        )
+        self._scheduler.start()
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(
+        self,
+        indices,
+        values,
+        spec: TuckerSpec,
+        *,
+        key=None,
+    ) -> TuckerTicket:
+        """Enqueue one decomposition of the COO tensor (``indices``,
+        ``values``, shape = ``spec.shape``); returns immediately with a
+        :class:`TuckerTicket`. ``key`` seeds the random factor init (default
+        PRNGKey(0), matching ``tucker.decompose``)."""
+        coo = SparseCOO.from_parts(indices, values, spec.shape)
+        return self.submit_coo(coo, spec, key=key)
+
+    def submit_coo(
+        self, coo: SparseCOO, spec: TuckerSpec, *, key=None
+    ) -> TuckerTicket:
+        """`submit` for callers who already hold a ``SparseCOO``."""
+        if spec.algorithm != "sparse":
+            raise ValueError(
+                f"TuckerService serves algorithm='sparse' specs, got "
+                f"{spec.algorithm!r} (dense inputs have no nnz axis to batch)"
+            )
+        if tuple(coo.shape) != spec.shape:
+            raise ValueError(
+                f"input shape {tuple(coo.shape)} does not match the spec "
+                f"shape {spec.shape}"
+            )
+        if coo.nnz == 0:
+            raise ValueError(
+                "cannot serve a tensor with zero stored nonzeros: an "
+                "all-zero tensor has no defined Tucker fit (relative error "
+                "is 0/0)"
+            )
+        if spec not in self._warned_specs:
+            from repro import tucker
+
+            # plan-level check: the spec property alone misses engine
+            # resolution (e.g. 'auto' -> pallas) and prebuilt-engine overrides
+            if not tucker.plan(spec).supports_batched_dispatch:
+                warnings.warn(
+                    f"spec {spec.engine=} {spec.pipeline=} "
+                    f"{spec.use_kron_reuse=} cannot share one batched "
+                    f"dispatch; its flushes fall back to sequential "
+                    f"execution (correct results, no amortization)",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
+            self._warned_specs.add(spec)
+        ticket = TuckerTicket()
+        now = time.perf_counter()
+        item = _Pending(coo=coo, key=key, ticket=ticket, submitted_at=now)
+        dt = spec.resolved_dtype()
+        bkey = BatchKey(
+            spec=spec,
+            bucket=bucket_nnz(
+                coo.nnz,
+                base=self.config.bucket_base,
+                growth=self.config.bucket_growth,
+            ),
+            dtype=str(dt) if dt is not None else str(coo.values.dtype),
+        )
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("TuckerService is closed")
+            self._batcher.add(bkey, item, now)
+            # counted before the notify can race a flush: 'submitted' never
+            # trails 'completed' in a concurrent snapshot
+            self.metrics.on_submit()
+            self._cv.notify()
+        return ticket
+
+    def decompose_batch(
+        self,
+        coos: Sequence[SparseCOO],
+        spec: TuckerSpec,
+        *,
+        keys=None,
+        timeout: Optional[float] = None,
+    ) -> List[TuckerResult]:
+        """Convenience: submit many tensors, block for all results (in
+        submission order). The scheduler still micro-batches them by bucket.
+        ``timeout`` bounds the WHOLE call, not each ticket."""
+        keys = list(keys) if keys is not None else [None] * len(coos)
+        if len(keys) != len(coos):
+            raise ValueError(f"got {len(keys)} keys for {len(coos)} tensors")
+        tickets = [
+            self.submit_coo(c, spec, key=k) for c, k in zip(coos, keys)
+        ]
+        deadline = None if timeout is None else time.monotonic() + timeout
+        results = []
+        for t in tickets:
+            left = (
+                None if deadline is None
+                else max(0.0, deadline - time.monotonic())
+            )
+            results.append(t.result(timeout=left))
+        return results
+
+    def flush(self) -> int:
+        """Execute every queued request NOW, on the calling thread (drain
+        semantics — partial batches allowed). Returns the number of requests
+        flushed. Deterministic tests and latency-sensitive callers use this
+        instead of waiting out ``max_wait_ms``."""
+        flushed = 0
+        while True:
+            with self._cv:
+                batch = self._batcher.pop_any()
+            if batch is None:
+                return flushed
+            flushed += len(batch.items)
+            self._execute(batch)
+
+    def pending(self) -> int:
+        with self._cv:
+            return len(self._batcher)
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the service. ``drain=True`` (default) executes everything
+        still queued first; ``drain=False`` fails pending tickets with
+        ``RuntimeError``. Idempotent."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closing = True
+            self._drain_on_close = bool(drain)
+            self._cv.notify_all()
+        self._scheduler.join()
+        with self._cv:
+            self._closed = True
+        if self._remove_eviction_hook is not None:
+            self._remove_eviction_hook()
+        if self.config.plan_cache_capacity is not None:
+            _uninstall_capacity(self)
+
+    def __enter__(self) -> "TuckerService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    # -- scheduler ----------------------------------------------------------
+
+    def _scheduler_loop(self) -> None:
+        while True:
+            with self._cv:
+                batch = None
+                while True:
+                    if self._closing and not self._drain_on_close:
+                        break  # don't pop ready work just to throw it away
+                    now = time.perf_counter()
+                    batch = self._batcher.pop_ready(now)
+                    if batch is not None or self._closing:
+                        break
+                    deadline = self._batcher.next_deadline()
+                    # tiny epsilon past the deadline so the re-check after a
+                    # timed wait sees it strictly expired.
+                    self._cv.wait(
+                        timeout=None
+                        if deadline is None
+                        else max(deadline - now, 0.0) + 1e-4
+                    )
+                if batch is None and self._closing:
+                    if self._drain_on_close:
+                        batch = self._batcher.pop_any()
+                    else:
+                        while True:
+                            dropped = self._batcher.pop_any()
+                            if dropped is None:
+                                break
+                            for item in dropped.items:
+                                item.ticket._set_exception(
+                                    RuntimeError(
+                                        "TuckerService closed before execution"
+                                    )
+                                )
+                            self.metrics.on_failure(len(dropped.items))
+                    if batch is None:
+                        return
+            self._execute(batch)
+
+    # -- execution ----------------------------------------------------------
+
+    def _execute(self, batch: Flush) -> None:
+        # safe from any thread (scheduler or a flush() caller): executions
+        # of one plan serialize on the plan's own lock, where the engine
+        # schedule-cache hazard actually lives.
+        from repro import tucker
+
+        items = batch.items
+        dequeued_at = time.perf_counter()
+        try:
+            plan = tucker.plan(batch.key.spec)
+            # the same predicate batch() decides with — including per-key
+            # fallbacks (e.g. non-threefry impls), so the padding metrics
+            # below describe what actually executed
+            vmappable = plan.batch_is_vmappable([it.key for it in items])
+            # sequential fallback: no shared program to pad for
+            pad_to = batch.key.bucket if vmappable else None
+            results = plan.batch(
+                [it.coo for it in items],
+                keys=[it.key for it in items],
+                pad_nnz_to=pad_to,
+            )
+        except Exception as exc:  # fail the batch, keep the scheduler alive
+            for it in items:
+                it.ticket._set_exception(exc)
+            self.metrics.on_failure(len(items))
+            return
+        # plan.batch is synchronous through its device->host history fetch,
+        # so `done` is an honest end-to-end execute timestamp.
+        done = time.perf_counter()
+        execute_ms = (done - dequeued_at) * 1e3
+        queue_ms, total_ms = [], []
+        for it, res in zip(items, results):
+            q_ms = (dequeued_at - it.submitted_at) * 1e3
+            t_ms = (done - it.submitted_at) * 1e3
+            res.timing = RequestTiming(
+                queue_ms=q_ms,
+                execute_ms=execute_ms,
+                total_ms=t_ms,
+                batch_size=len(items),
+                nnz=it.coo.nnz,
+                # the fallback path runs each tensor at its real nnz: honest
+                # padding metrics, not the bucket it would have padded to
+                nnz_padded=batch.key.bucket if vmappable else it.coo.nnz,
+                flush_reason=batch.reason,
+            )
+            queue_ms.append(q_ms)
+            total_ms.append(t_ms)
+        self.metrics.on_flush(
+            reason=batch.reason,
+            batch_size=len(items),
+            dispatches=sum(r.dispatches for r in results),
+            nnz_real=sum(it.coo.nnz for it in items),
+            nnz_padded=sum(r.timing.nnz_padded for r in results),
+            execute_ms=execute_ms,
+            queue_ms=queue_ms,
+            total_ms=total_ms,
+        )
+        for it, res in zip(items, results):
+            it.ticket._set_result(res)
+
+    # -- plan-cache eviction observation ------------------------------------
+
+    def _on_plan_evicted(self, key, plan) -> None:
+        self.metrics.on_plan_eviction()

@@ -2,9 +2,11 @@ from repro.sparse.layout import (
     DeviceSchedule,
     KronReusePlan,
     SortedCOO,
+    bucket_nnz,
     build_kron_reuse,
     build_mode_layout,
     build_schedule,
+    pad_coo_batch,
     visited_row_mask,
 )
 from repro.sparse.generators import (

@@ -301,3 +301,82 @@ def layout_padding_fraction(layout: SortedCOO) -> float:
     """Fraction of streamed nonzero slots that are padding — the price of
     block alignment (useful for picking bn on very sparse modes)."""
     return 1.0 - float(layout.valid.sum()) / max(1, layout.nnz_padded)
+
+
+# ---------------------------------------------------------------------------
+# Batch-dimension padding: nnz bucketing for shape-stable batched dispatch.
+#
+# The compiled batched sweep program (``core.hooi._batched_scan_sweeps``) is
+# shape-keyed on the padded nnz, so a serving plane that padded every flush to
+# its own batch max would compile one program per distinct max — unbounded.
+# Rounding the pad target up to a geometric bucket boundary bounds the number
+# of distinct programs to O(log nnz_max) while wasting at most (growth - 1)x
+# padded slots (explicit zeros, which contribute nothing to any contraction).
+# ---------------------------------------------------------------------------
+
+
+def bucket_nnz(nnz: int, base: int = 512, growth: float = 2.0) -> int:
+    """Smallest bucket boundary >= ``nnz`` on the geometric grid
+    ``base, ceil(base*growth), ceil(base*growth^2), ...``.
+
+    ``nnz = 0`` maps to ``base`` (a bucket is a pad *target*, never smaller
+    than one block of real capacity).
+    """
+    if int(base) < 1:
+        raise ValueError(f"bucket base must be >= 1, got {base}")
+    if not growth > 1.0:
+        raise ValueError(f"bucket growth must be > 1, got {growth}")
+    if int(nnz) < 0:
+        raise ValueError(f"nnz must be >= 0, got {nnz}")
+    b = int(base)
+    while b < int(nnz):
+        b = int(np.ceil(b * float(growth)))
+    return b
+
+
+def pad_coo_batch(coos, target_nnz: Optional[int] = None):
+    """Stack k same-shape COO tensors into batched ``(k, nnz_pad, N)`` index
+    and ``(k, nnz_pad)`` value arrays, padding each tensor with explicit
+    zeros (the padding convention of ``SparseCOO.pad_to``: index 0, value 0).
+
+    This is the padding step of ``TuckerPlan.batch``, extracted so the
+    serving plane can pad flushes to a :func:`bucket_nnz` boundary and hit
+    one compiled program per (batch size, bucket) instead of one per batch.
+
+    ``target_nnz=None`` pads to the batch max (the plan API's default);
+    anything smaller than the batch max is an error — padding never drops
+    nonzeros.
+
+    Built host-side in numpy and uploaded as two arrays: a device-op
+    assembly (k ``pad_to`` concats + stacks) costs several eager dispatches
+    per flush, which on CPU rivals the batched sweep program itself.
+    """
+    if not coos:
+        raise ValueError("pad_coo_batch needs at least one tensor")
+    shapes = {tuple(c.shape) for c in coos}
+    if len(shapes) != 1:
+        raise ValueError(f"pad_coo_batch needs same-shape tensors, got {shapes}")
+    nnz_max = max(int(c.indices.shape[0]) for c in coos)
+    target = nnz_max if target_nnz is None else int(target_nnz)
+    if target < nnz_max:
+        raise ValueError(
+            f"target_nnz={target} would drop nonzeros: batch max nnz is {nnz_max}"
+        )
+    k, ndim = len(coos), len(coos[0].shape)
+    vdtypes = {np.dtype(c.values.dtype) for c in coos}
+    if len(vdtypes) != 1:
+        # silent promotion would run narrow members at a wider dtype and
+        # break batched-vs-sequential parity; make the caller decide
+        raise ValueError(
+            f"pad_coo_batch needs one common value dtype, got "
+            f"{sorted(str(d) for d in vdtypes)} — cast the members, or plan "
+            f"with a concrete spec dtype"
+        )
+    (vdtype,) = vdtypes
+    idx = np.zeros((k, target, ndim), dtype=np.int32)
+    val = np.zeros((k, target), dtype=vdtype)
+    for b, c in enumerate(coos):
+        n = int(c.indices.shape[0])
+        idx[b, :n] = np.asarray(c.indices)
+        val[b, :n] = np.asarray(c.values)
+    return jnp.asarray(idx), jnp.asarray(val)

@@ -17,24 +17,33 @@ The legacy entrypoints (``repro.core.hooi.hooi_sparse`` / ``hooi_dense`` /
 ``tucker_complete_dense``) are deprecation shims over this package.
 """
 from repro.tucker.planning import (
+    PlanCache,
     TuckerPlan,
+    add_plan_eviction_hook,
     clear_plan_cache,
     decompose,
     engine_for_spec,
     plan,
+    plan_cache_info,
+    set_plan_cache_capacity,
 )
-from repro.tucker.result import TuckerResult
+from repro.tucker.result import RequestTiming, TuckerResult
 from repro.tucker.spec import ALGORITHMS, METHODS, TuckerSpec, spec_for
 
 __all__ = [
     "ALGORITHMS",
     "METHODS",
+    "PlanCache",
+    "RequestTiming",
     "TuckerPlan",
     "TuckerResult",
     "TuckerSpec",
+    "add_plan_eviction_hook",
     "clear_plan_cache",
     "decompose",
     "engine_for_spec",
     "plan",
+    "plan_cache_info",
+    "set_plan_cache_capacity",
     "spec_for",
 ]

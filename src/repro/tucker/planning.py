@@ -19,8 +19,10 @@ are thin deprecation shims over this module.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import warnings
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,14 +31,78 @@ import numpy as np
 from repro.core import hooi as _hooi
 from repro.core.coo import SparseCOO
 from repro.core.engine import SweepEngine, resolve_engine
+from repro.sparse.layout import pad_coo_batch
 from repro.tucker.result import TuckerResult
 from repro.tucker.spec import TuckerSpec, spec_for
 
-__all__ = ["TuckerPlan", "plan", "decompose", "engine_for_spec", "clear_plan_cache"]
+__all__ = [
+    "PlanCache",
+    "TuckerPlan",
+    "add_plan_eviction_hook",
+    "clear_plan_cache",
+    "decompose",
+    "engine_for_spec",
+    "plan",
+    "plan_cache_info",
+    "set_plan_cache_capacity",
+]
 
 
 def _total_traces() -> int:
     return sum(_hooi.SWEEP_TRACE_COUNTS.values())
+
+
+_DEFAULT_NP_KEY: Optional[np.ndarray] = None
+
+
+def _default_np_key() -> np.ndarray:
+    """Host copy of PRNGKey(0), built once — creating the default key per
+    batch member costs one eager dispatch each, which adds up on a hot
+    serving flush path."""
+    global _DEFAULT_NP_KEY
+    if _DEFAULT_NP_KEY is None:
+        _DEFAULT_NP_KEY = np.asarray(jax.random.PRNGKey(0))
+    return _DEFAULT_NP_KEY
+
+
+def _is_typed_key(k) -> bool:
+    """New-style typed PRNG key (``jax.random.key``), whose dtype carries the
+    impl — unlike raw uint32 keys, it cannot round-trip through numpy."""
+    return (
+        k is not None
+        and hasattr(k, "dtype")
+        and jnp.issubdtype(k.dtype, jax.dtypes.prng_key)
+    )
+
+
+def _np_key(k) -> np.ndarray:
+    """Host view of one raw (uint32) PRNG key; ``None`` is the default key."""
+    return _default_np_key() if k is None else np.asarray(k)
+
+
+def _key_vmappable(k) -> bool:
+    """Whether this PRNG key reproduces the per-tensor init inside the
+    vmapped batched program. Raw/None keys and typed threefry keys do;
+    other impls (e.g. rbg) generate DIFFERENT streams under vmap than
+    unvmapped — batching them would silently break same-key
+    reproducibility, so those batches fall back to sequential calls."""
+    return not _is_typed_key(k) or str(k.dtype) == "key<fry>"
+
+
+def _stack_keys(keys) -> jax.Array:
+    """One key array for the batched program. All-raw/None keys assemble
+    host-side (zero eager dispatches — the hot serving path); typed
+    threefry keys are unwrapped to their raw uint32 data, which IS a legacy
+    threefry key with the identical stream."""
+    return jnp.asarray(
+        np.stack(
+            [
+                np.asarray(jax.random.key_data(k)) if _is_typed_key(k)
+                else _np_key(k)
+                for k in keys
+            ]
+        )
+    )
 
 
 def engine_for_spec(
@@ -117,6 +183,13 @@ class TuckerPlan:
                 )
             self.engine = None
         self.stats = PlanStats()
+        # executions serialize per plan: the engine's schedule caches are
+        # bound to ONE tensor at a time (SweepEngine._bind), so concurrent
+        # calls could contract tensor A against tensor B's schedule. Plans
+        # are shared process-wide through the plan cache — the lock lives
+        # here, not on any one caller. (A prebuilt engine handed to several
+        # plans still must not execute concurrently across them.)
+        self._exec_lock = threading.RLock()
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         eng = self.engine.name if self.engine is not None else "xla"
@@ -126,27 +199,65 @@ class TuckerPlan:
             f"pipeline={self.spec.pipeline}, calls={self.stats.calls})"
         )
 
+    @property
+    def supports_batched_dispatch(self) -> bool:
+        """Whether :meth:`batch` runs its members as ONE vmapped dispatch:
+        the spec-level property AND an engine that actually resolved to
+        plain XLA ('auto' may have picked Pallas; a prebuilt reuse engine
+        overrides the spec). The single source of truth — the serving plane
+        keys its padding decisions and metrics off this."""
+        return (
+            self.spec.supports_batched_dispatch
+            and self.engine is not None
+            and self.engine.name == "xla"
+            and not self.engine.use_kron_reuse
+        )
+
+    def batch_is_vmappable(self, keys=None) -> bool:
+        """Whether :meth:`batch` with these keys runs as ONE vmapped
+        dispatch — the plan-level property AND every key reproducible under
+        vmap. The serving plane keys its padding decisions and metrics off
+        this; batch() itself decides with the same call."""
+        return self.supports_batched_dispatch and (
+            keys is None or all(_key_vmappable(k) for k in keys)
+        )
+
     # -- public execution surface -----------------------------------------
 
     def __call__(self, x, key=None, factors_init=None) -> TuckerResult:
-        """Run the planned decomposition on one tensor of the spec's shape."""
-        self.stats.calls += 1
-        if self.spec.algorithm == "dense":
-            return self._run_dense(x, key, factors_init)
-        coo = self._check_sparse_input(x)
-        if self.spec.algorithm == "complete":
-            return self._run_complete(coo, key, factors_init)
-        return self._run_sparse(coo, key, factors_init)
+        """Run the planned decomposition on one tensor of the spec's shape.
+        Thread-safe: concurrent calls on one plan serialize."""
+        with self._exec_lock:
+            self.stats.calls += 1
+            if self.spec.algorithm == "dense":
+                return self._run_dense(x, key, factors_init)
+            coo = self._check_sparse_input(x)
+            if self.spec.algorithm == "complete":
+                return self._run_complete(coo, key, factors_init)
+            return self._run_sparse(coo, key, factors_init)
 
-    def batch(self, coos: Sequence[SparseCOO], keys=None) -> List[TuckerResult]:
+    def batch(
+        self,
+        coos: Sequence[SparseCOO],
+        keys=None,
+        pad_nnz_to: Optional[int] = None,
+    ) -> List[TuckerResult]:
         """Decompose k same-shape sparse tensors as ONE batched dispatch.
 
-        Nonzeros are padded to the batch max (explicit zeros contribute
-        nothing to any contraction) and the whole compiled multi-sweep
-        program is ``vmap``-ed over the leading batch axis. Falls back to k
-        sequential calls — same results, k dispatches — for configurations
-        whose per-tensor schedules cannot share one program (the Pallas
-        engine, Kron-reuse dedup plans, the legacy python pipeline).
+        Nonzeros are padded to the batch max — or to ``pad_nnz_to``, e.g. a
+        ``repro.sparse.layout.bucket_nnz`` boundary so repeated flushes share
+        one compiled program — with explicit zeros, which contribute nothing
+        to any contraction; then the whole compiled multi-sweep program is
+        ``vmap``-ed over the leading batch axis. Falls back to k sequential
+        calls — same results, k dispatches — for configurations whose
+        per-tensor schedules cannot share one program (the Pallas engine,
+        Kron-reuse dedup plans, the legacy python pipeline); ``pad_nnz_to``
+        is irrelevant there (no shared program to stabilize) and ignored.
+
+        An empty ``coos`` is a defined no-op (``[]``); a member tensor with
+        zero stored nonzeros is rejected with a clear error — its relative
+        error is 0/0, and the all-padding member would otherwise surface as
+        an opaque NaN (or XLA shape error) deep in the compiled program.
 
         Per-call counters on the returned results describe the whole batched
         dispatch, not one element.
@@ -165,16 +276,18 @@ class TuckerPlan:
             )
         if not coos:
             return []
-        eng = self.engine
-        vmappable = (
-            self.spec.pipeline == "scan"
-            and eng.name == "xla"
-            and not eng.use_kron_reuse
-        )
-        if not vmappable:
-            return [self(c, key=k) for c, k in zip(coos, keys)]
-        self.stats.calls += len(coos)  # same meaning as the sequential fallback
-        return self._run_sparse_vmapped(coos, keys)
+        empty = [i for i, c in enumerate(coos) if int(c.indices.shape[0]) == 0]
+        if empty:
+            raise ValueError(
+                f"batch() members {empty} have zero stored nonzeros: an "
+                f"all-zero tensor has no defined Tucker fit (relative error "
+                f"is 0/0) — filter empties out before submitting"
+            )
+        with self._exec_lock:  # reentrant: the fallback loop re-enters __call__
+            if not self.batch_is_vmappable(keys):
+                return [self(c, key=k) for c, k in zip(coos, keys)]
+            self.stats.calls += len(coos)  # same meaning as the fallback
+            return self._run_sparse_vmapped(coos, keys, pad_nnz_to)
 
     # -- input validation ---------------------------------------------------
 
@@ -301,35 +414,19 @@ class TuckerPlan:
             schedule_builds=eng.schedule_builds - builds0,
         )
 
-    def _run_sparse_vmapped(self, coos, keys) -> List[TuckerResult]:
+    def _run_sparse_vmapped(self, coos, keys, pad_nnz_to=None) -> List[TuckerResult]:
         spec = self.spec
-        nnz_max = max(c.indices.shape[0] for c in coos)
-        padded = [c.pad_to(nnz_max) for c in coos]
-        idx = jnp.stack([c.indices for c in padded])
-        val = jnp.stack([c.values for c in padded])
-        jkeys = jnp.stack(
-            [k if k is not None else jax.random.PRNGKey(0) for k in keys]
-        )
-        dt = spec.resolved_dtype()
-
-        def init_one(k):
-            return tuple(_hooi.init_factors(spec.shape, spec.ranks, k, dtype=dt))
-
-        factors = jax.vmap(init_one)(jkeys)
-        # identical formula to the per-tensor path (square of the norm), so
-        # batched results are bit-compatible with sequential calls.
-        xnorm2 = jax.vmap(
-            lambda v: jnp.square(
-                jnp.sqrt(jnp.sum(jnp.square(v.astype(jnp.float32))))
-            )
-        )(val)
+        idx, val = pad_coo_batch(coos, target_nnz=pad_nnz_to)
+        jkeys = _stack_keys(keys)
         traces0 = _total_traces()
-        fs, core, hist_dev = _hooi._batched_scan_sweeps(
-            idx, val, factors, xnorm2, jnp.float32(spec.tol),
+        # init + norm + all sweeps for all k tensors: ONE fused XLA dispatch
+        cores, factors, hist_dev = _hooi._batched_scan_sweeps(
+            idx, val, jkeys, jnp.float32(spec.tol),
             shape=spec.shape,
             ranks=spec.ranks,
             method=spec.method,
             n_iter=spec.n_iter,
+            dtype=spec.resolved_dtype(),
         )
         _hooi.SWEEP_DISPATCH_COUNTS[("xla", "scan")] += 1
         hists = np.asarray(_hooi._fetch_history(hist_dev))  # (k, n_iter)
@@ -340,7 +437,7 @@ class TuckerPlan:
             n_done = int(np.sum(hist != _hooi._SKIPPED))
             results.append(
                 self._result(
-                    core[i], [f[i] for f in fs], hist[:n_done],
+                    cores[i], list(factors[i]), hist[:n_done],
                     engine="xla",
                     dispatches=1 if i == 0 else 0,
                     retraces=retraces if i == 0 else 0,
@@ -422,10 +519,138 @@ class TuckerPlan:
 
 # ---------------------------------------------------------------------------
 # The plan cache: one TuckerPlan (and therefore one engine + one compiled
-# program family) per (spec, resolved engine).
+# program family) per (spec, resolved engine). LRU with optional capacity —
+# a long-lived service must not pin every compiled program + device-resident
+# schedule it has ever seen — and thread-safe: concurrent ``submit`` callers
+# share one plan instead of racing a double construction of the same spec.
 # ---------------------------------------------------------------------------
 
-_PLAN_CACHE: Dict[Tuple[TuckerSpec, str], TuckerPlan] = {}
+PlanCacheKey = Tuple[TuckerSpec, str]
+EvictionHook = Callable[[PlanCacheKey, TuckerPlan], None]
+
+
+class PlanCache:
+    """Thread-safe LRU cache of :class:`TuckerPlan` keyed by
+    (spec, resolved engine name).
+
+    ``capacity=None`` means unbounded (the historical behavior; right for
+    scripts and benchmarks). A serving process sets a capacity so dropping a
+    spec from rotation eventually frees its engine's device-resident
+    schedules; eviction hooks let it observe (and e.g. count) those drops.
+    Hooks fire outside the lock — an eviction hook may safely re-enter the
+    cache.
+    """
+
+    def __init__(self, capacity: Optional[int] = None):
+        self._lock = threading.RLock()
+        self._entries: "OrderedDict[PlanCacheKey, TuckerPlan]" = OrderedDict()
+        self._capacity = capacity
+        self._hooks: List[EvictionHook] = []
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        # bumps on every set_capacity call: lets a scoped capacity holder
+        # (repro.serve) detect a manual override even to the same value
+        self.capacity_version = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    @property
+    def capacity(self) -> Optional[int]:
+        return self._capacity
+
+    def get_or_create(
+        self, key: PlanCacheKey, factory: Callable[[], TuckerPlan]
+    ) -> TuckerPlan:
+        """Return the cached plan for ``key``. Concurrent callers always end
+        up sharing ONE plan object (one engine, one schedule cache, one
+        compiled-program family): the build runs OUTSIDE the lock — a cold
+        spec's construction must not stall cache hits for hot specs on a
+        serving flush path — and a racing builder discards its plan in favor
+        of the first one inserted, so no second copy is ever used (or
+        compiled against)."""
+        with self._lock:
+            cached = self._entries.get(key)
+            if cached is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return cached
+        built = factory()
+        evicted = []
+        with self._lock:
+            cached = self._entries.get(key)
+            if cached is not None:  # lost the build race: share the winner
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return cached
+            self.misses += 1
+            self._entries[key] = built
+            while self._capacity is not None and len(self._entries) > self._capacity:
+                evicted.append(self._entries.popitem(last=False))
+                self.evictions += 1
+        for k, p in evicted:
+            self._fire_hooks(k, p)
+        return built
+
+    def set_capacity(self, capacity: Optional[int]) -> None:
+        """Set (or lift, with ``None``) the LRU capacity, evicting the
+        least-recently-used plans immediately if over the new bound."""
+        if capacity is not None and int(capacity) < 1:
+            raise ValueError(f"plan cache capacity must be >= 1, got {capacity}")
+        evicted = []
+        with self._lock:
+            self._capacity = None if capacity is None else int(capacity)
+            self.capacity_version += 1
+            while self._capacity is not None and len(self._entries) > self._capacity:
+                evicted.append(self._entries.popitem(last=False))
+                self.evictions += 1
+        for k, p in evicted:
+            self._fire_hooks(k, p)
+
+    def add_eviction_hook(self, hook: EvictionHook) -> Callable[[], None]:
+        """Register ``hook(key, plan)`` to run on every eviction (capacity
+        or ``clear``). Returns a zero-argument deregistration callable."""
+        with self._lock:
+            self._hooks.append(hook)
+
+        def remove() -> None:
+            with self._lock:
+                if hook in self._hooks:
+                    self._hooks.remove(hook)
+
+        return remove
+
+    def clear(self) -> None:
+        """Drop all cached plans (test isolation / freeing device
+        schedules). Eviction hooks observe every dropped plan."""
+        with self._lock:
+            dropped = list(self._entries.items())
+            self._entries.clear()
+        for k, p in dropped:
+            self._fire_hooks(k, p)
+
+    def info(self) -> dict:
+        """Counters snapshot: size/capacity/hits/misses/evictions."""
+        with self._lock:
+            return {
+                "size": len(self._entries),
+                "capacity": self._capacity,
+                "capacity_version": self.capacity_version,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+            }
+
+    def _fire_hooks(self, key: PlanCacheKey, plan: TuckerPlan) -> None:
+        with self._lock:
+            hooks = list(self._hooks)
+        for hook in hooks:
+            hook(key, plan)
+
+
+_PLAN_CACHE = PlanCache()
 
 
 def plan(spec: TuckerSpec, *, engine: Optional[SweepEngine] = None) -> TuckerPlan:
@@ -433,9 +658,12 @@ def plan(spec: TuckerSpec, *, engine: Optional[SweepEngine] = None) -> TuckerPla
 
     Plans are cached per (spec, resolved engine), so every caller asking for
     the same problem shares one engine — and its schedule caches — and one
-    compiled program. Passing a prebuilt ``engine`` bypasses the cache and
-    wraps that engine directly (its cached device schedules are reused
-    across calls, like handing ``hooi_sparse`` a ``SweepEngine`` did).
+    compiled program. The cache is thread-safe (concurrent ``submit`` callers
+    of ``repro.serve.TuckerService`` never double-build a spec) and LRU-bounded
+    when :func:`set_plan_cache_capacity` set a capacity. Passing a prebuilt
+    ``engine`` bypasses the cache and wraps that engine directly (its cached
+    device schedules are reused across calls, like handing ``hooi_sparse`` a
+    ``SweepEngine`` did).
     """
     if engine is not None:
         return TuckerPlan(spec, engine=engine)
@@ -446,15 +674,29 @@ def plan(spec: TuckerSpec, *, engine: Optional[SweepEngine] = None) -> TuckerPla
         # warn) as backend availability changes — exactly like the legacy
         # drivers resolved per call.
         key = (spec, resolve_engine(spec.engine))
-    cached = _PLAN_CACHE.get(key)
-    if cached is None:
-        cached = _PLAN_CACHE[key] = TuckerPlan(spec, _resolved=key[1])
-    return cached
+    return _PLAN_CACHE.get_or_create(key, lambda: TuckerPlan(spec, _resolved=key[1]))
 
 
 def clear_plan_cache() -> None:
     """Drop all cached plans (test isolation / freeing device schedules)."""
     _PLAN_CACHE.clear()
+
+
+def set_plan_cache_capacity(capacity: Optional[int]) -> None:
+    """Bound the global plan cache to ``capacity`` plans (LRU eviction), or
+    lift the bound with ``None``. Takes effect immediately."""
+    _PLAN_CACHE.set_capacity(capacity)
+
+
+def plan_cache_info() -> dict:
+    """Size/capacity/hit/miss/eviction counters of the global plan cache."""
+    return _PLAN_CACHE.info()
+
+
+def add_plan_eviction_hook(hook: EvictionHook) -> Callable[[], None]:
+    """Observe global plan-cache evictions; returns a deregistration
+    callable. See :meth:`PlanCache.add_eviction_hook`."""
+    return _PLAN_CACHE.add_eviction_hook(hook)
 
 
 def decompose(x, ranks: Sequence[int], *, key=None, factors_init=None,

@@ -19,6 +19,40 @@ if TYPE_CHECKING:
     from repro.tucker.spec import TuckerSpec
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestTiming:
+    """Where one served request's wall-clock went (attached to
+    :class:`TuckerResult` by ``repro.serve.TuckerService``; ``None`` on
+    direct plan/decompose calls).
+
+    ``execute_ms`` is the wall-clock of the whole batched dispatch the
+    request rode in — shared by all ``batch_size`` members, which is the
+    point: per-request amortized cost is ``execute_ms / batch_size``.
+
+    Attributes:
+      queue_ms: submit -> dequeue (micro-batching wait).
+      execute_ms: dequeue -> results ready (the batched dispatch).
+      total_ms: submit -> results ready.
+      batch_size: number of requests in the flush that served this one.
+      nnz: this request's real stored nonzeros.
+      nnz_padded: the flush's common padded nnz (its bucket boundary).
+      flush_reason: why the batch flushed — 'full', 'timeout' or 'drain'.
+    """
+
+    queue_ms: float
+    execute_ms: float
+    total_ms: float
+    batch_size: int
+    nnz: int
+    nnz_padded: int
+    flush_reason: str
+
+    @property
+    def padding_fraction(self) -> float:
+        """Fraction of this request's streamed nnz slots that were padding."""
+        return 1.0 - self.nnz / max(1, self.nnz_padded)
+
+
 @dataclasses.dataclass
 class TuckerResult(HooiResult):
     """A :class:`~repro.core.hooi.HooiResult` plus plan/serving metadata.
@@ -38,6 +72,8 @@ class TuckerResult(HooiResult):
         (0 on every plan-cache hit — the serving steady state).
       schedule_builds: host-side schedule constructions/uploads this call
         triggered (0 when the engine's per-tensor caches were warm).
+      timing: per-request queue/batch/execute wall-clock when the result was
+        produced by ``repro.serve.TuckerService`` (``None`` otherwise).
     """
 
     spec: Optional["TuckerSpec"] = None
@@ -45,6 +81,7 @@ class TuckerResult(HooiResult):
     dispatches: int = 0
     retraces: int = 0
     schedule_builds: int = 0
+    timing: Optional[RequestTiming] = None
 
     @property
     def n_sweeps(self) -> int:

@@ -112,6 +112,21 @@ class TuckerSpec:
     def ndim(self) -> int:
         return len(self.shape)
 
+    @property
+    def supports_batched_dispatch(self) -> bool:
+        """True when plans for this spec can vmap k tensors into ONE XLA
+        dispatch (``TuckerPlan.batch``'s fast path, and the micro-batching
+        contract ``repro.serve.TuckerService`` schedules around): the compiled
+        scan pipeline over sparse COO input, without the Kron-reuse dedup
+        (whose per-tensor plan arrays have data-dependent sizes and cannot
+        share one batched program). The engine must additionally *resolve* to
+        'xla' — that happens at plan level, where resolution lives."""
+        return (
+            self.algorithm == "sparse"
+            and self.pipeline == "scan"
+            and not self.use_kron_reuse
+        )
+
     def resolved_dtype(self):
         """The concrete working dtype, or ``None`` for "auto" (follow the
         jax x64 flag at execution time, like the legacy drivers)."""

@@ -106,3 +106,120 @@ def test_sparse_ttm_chain_matches_dense_oracle(coo, data, seed):
     )
     scale = np.abs(want).max() + 1e-6
     np.testing.assert_allclose(got / scale, want / scale, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# nnz bucketing + batch padding (the serving plane's shape-stability layer).
+# ---------------------------------------------------------------------------
+
+from repro.sparse.layout import bucket_nnz, pad_coo_batch  # noqa: E402
+
+
+@SETTINGS
+@given(nnz=st.integers(0, 10_000), base=st.integers(1, 512),
+       growth=st.floats(1.1, 4.0, allow_nan=False))
+def test_bucket_nnz_properties(nnz, base, growth):
+    b = bucket_nnz(nnz, base=base, growth=growth)
+    assert b >= nnz and b >= base  # never drops nonzeros, never sub-base
+    assert bucket_nnz(b, base=base, growth=growth) == b  # boundaries are fixpoints
+    if nnz > base:
+        # minimality: the next-smaller grid point is strictly below nnz
+        prev = base
+        while True:
+            nxt = int(np.ceil(prev * growth))
+            if nxt >= b:
+                break
+            prev = nxt
+        assert prev < nnz
+
+
+@SETTINGS
+@given(nnz_a=st.integers(0, 500), nnz_b=st.integers(0, 500))
+def test_bucket_nnz_monotone(nnz_a, nnz_b):
+    lo, hi = sorted((nnz_a, nnz_b))
+    assert bucket_nnz(lo) <= bucket_nnz(hi)
+
+
+@st.composite
+def same_shape_coo_batches(draw, max_ndim=3, max_side=5, max_nnz=12, max_k=4):
+    ndim = draw(st.integers(2, max_ndim))
+    shape = tuple(draw(st.integers(1, max_side)) for _ in range(ndim))
+    coos = []
+    for _ in range(draw(st.integers(1, max_k))):
+        nnz = draw(st.integers(0, max_nnz))
+        idx = np.array(
+            [[draw(st.integers(0, s - 1)) for s in shape] for _ in range(nnz)],
+            dtype=np.int32,
+        ).reshape(nnz, ndim)
+        vals = np.array(
+            [draw(st.floats(-4, 4, allow_nan=False, width=32))
+             for _ in range(nnz)],
+            dtype=np.float32,
+        )
+        coos.append(SparseCOO.from_parts(idx, vals, shape))
+    return coos
+
+
+@SETTINGS
+@given(coos=same_shape_coo_batches(), extra=st.integers(0, 9))
+def test_pad_coo_batch_preserves_each_member_dense(coos, extra):
+    shape = coos[0].shape
+    nnz_max = max(c.nnz for c in coos)
+    idx, val = pad_coo_batch(coos, target_nnz=nnz_max + extra)
+    assert idx.shape == (len(coos), nnz_max + extra, len(shape))
+    for k, c in enumerate(coos):
+        rebuilt = SparseCOO.from_parts(idx[k], val[k], shape)
+        np.testing.assert_allclose(
+            np.asarray(rebuilt.to_dense()), np.asarray(c.to_dense()),
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+# Ragged-nnz batched-decompose parity (ISSUE 4 satellite). The spec is FIXED
+# and every batch pads to one bucket boundary so hypothesis explores data, not
+# compile-cache keys: the whole property reuses two compiled programs.
+_PARITY_SHAPE = (6, 5, 4)
+_PARITY_BUCKET = 32
+
+
+@st.composite
+def ragged_coo_batches(draw, k=3, max_nnz=24):
+    coos = []
+    for _ in range(k):
+        nnz = draw(st.integers(1, max_nnz))
+        idx = np.array(
+            [[draw(st.integers(0, s - 1)) for s in _PARITY_SHAPE]
+             for _ in range(nnz)],
+            dtype=np.int32,
+        ).reshape(nnz, len(_PARITY_SHAPE))
+        # bounded away from 0 so no member is an (undefined) all-zero tensor
+        vals = np.array(
+            [draw(st.floats(0.1, 4, allow_nan=False, width=32))
+             * (-1 if draw(st.booleans()) else 1) for _ in range(nnz)],
+            dtype=np.float32,
+        )
+        coos.append(SparseCOO.from_parts(idx, vals, _PARITY_SHAPE))
+    return coos
+
+
+@settings(max_examples=10, deadline=None)
+@given(coos=ragged_coo_batches())
+def test_batched_padded_decompose_matches_per_tensor(coos):
+    """The serving contract: batched-and-padded results are allclose to
+    per-tensor decompose across ragged nnz."""
+    from repro import tucker
+
+    spec = tucker.TuckerSpec(shape=_PARITY_SHAPE, ranks=(2, 2, 2),
+                             method="gram", n_iter=2)
+    plan = tucker.plan(spec)
+    got = plan.batch(coos, pad_nnz_to=_PARITY_BUCKET)
+    for c, g in zip(coos, got):
+        # sequential reference on the SAME padded nnz shape (one compiled
+        # per-tensor program for the whole property, not one per drawn nnz)
+        ref = plan(c.pad_to(_PARITY_BUCKET))
+        np.testing.assert_allclose(np.asarray(g.core), np.asarray(ref.core),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(g.fit_history, ref.fit_history, atol=1e-5)
+        for fg, fr in zip(g.factors, ref.factors):
+            np.testing.assert_allclose(np.asarray(fg), np.asarray(fr),
+                                       rtol=1e-4, atol=1e-4)

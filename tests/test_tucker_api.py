@@ -74,6 +74,64 @@ def test_spec_dtype_canonicalization():
     assert _spec(dtype="bfloat16").resolved_dtype() == jnp.bfloat16
 
 
+def test_plan_cache_lru_eviction_and_hooks():
+    tucker.clear_plan_cache()
+    evicted = []
+    remove = tucker.add_plan_eviction_hook(lambda key, plan: evicted.append(key))
+    evictions0 = tucker.plan_cache_info()["evictions"]  # lifetime counter
+    try:
+        tucker.set_plan_cache_capacity(2)
+        s1 = _spec(shape=(10, 8, 6), ranks=(2, 2, 2))
+        s2 = _spec(shape=(10, 8, 6), ranks=(3, 2, 2))
+        s3 = _spec(shape=(10, 8, 6), ranks=(2, 3, 2))
+        p1 = tucker.plan(s1)
+        tucker.plan(s2)
+        assert tucker.plan(s1) is p1  # refreshes s1's recency
+        tucker.plan(s3)  # evicts s2, the least recently used
+        assert [k[0] for k in evicted] == [s2]
+        assert tucker.plan(s1) is p1  # s1 survived
+        assert tucker.plan_cache_info()["size"] == 2
+        assert tucker.plan_cache_info()["evictions"] - evictions0 == 1
+        # shrinking the capacity evicts immediately
+        tucker.set_plan_cache_capacity(1)
+        assert tucker.plan_cache_info()["size"] == 1
+        with pytest.raises(ValueError, match="capacity"):
+            tucker.set_plan_cache_capacity(0)
+    finally:
+        remove()
+        tucker.set_plan_cache_capacity(None)
+    # deregistered hook no longer fires
+    n = len(evicted)
+    tucker.clear_plan_cache()
+    assert len(evicted) == n
+
+
+def test_plan_cache_concurrent_lookup_builds_once():
+    """The satellite: concurrent plan() callers of one new spec must share a
+    single TuckerPlan (one engine, one schedule cache, one compiled-program
+    family) and record one cache miss — a racing builder's transient copy is
+    discarded, never returned or executed."""
+    import threading
+
+    tucker.clear_plan_cache()
+    spec = _spec(shape=(11, 9, 7), ranks=(2, 2, 2))
+    misses0 = tucker.plan_cache_info()["misses"]
+    built = []
+    barrier = threading.Barrier(8)
+
+    def worker():
+        barrier.wait()  # maximize the race window
+        built.append(tucker.plan(spec))
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len({id(p) for p in built}) == 1
+    assert tucker.plan_cache_info()["misses"] - misses0 == 1
+
+
 def test_plan_cache_returns_same_plan():
     spec = _spec(shape=(10, 8, 6), ranks=(2, 2, 2))
     assert tucker.plan(spec) is tucker.plan(spec)
@@ -188,6 +246,74 @@ def test_batch_fallback_configs_match_sequential(engine, pipeline, use_kron_reus
     got = p.batch(coos)
     for g, s in zip(got, seq):
         np.testing.assert_array_equal(np.asarray(g.core), np.asarray(s.core))
+
+
+def test_batch_empty_and_zero_nnz_edge_cases():
+    """The service-facing edge cases: an empty request list is a defined
+    no-op, a zero-nnz member is a clear ValueError (its relative error is
+    0/0) — never an opaque XLA shape error or silent NaN."""
+    import jax.numpy as jnp
+
+    p = tucker.plan(_spec(shape=(10, 8, 6), ranks=(2, 2, 2)))
+    assert p.batch([]) == []
+    empty = SparseCOO(jnp.zeros((0, 3), jnp.int32), jnp.zeros((0,), jnp.float32),
+                      (10, 8, 6))
+    with pytest.raises(ValueError, match="zero stored nonzeros"):
+        p.batch([random_sparse_tensor((10, 8, 6), 0.05, seed=3), empty])
+
+
+def test_batch_pad_nnz_to_bucket_shares_one_program():
+    """Padding two different-max-nnz flushes to one bucket boundary must
+    produce identical-to-sequential results AND reuse one compiled batched
+    program (the serving plane's amortization contract)."""
+    from repro.sparse.layout import bucket_nnz
+
+    spec = _spec(shape=(15, 12, 10), ranks=(3, 2, 2))
+    p = tucker.plan(spec)
+    a = [random_sparse_tensor(spec.shape, d, seed=s)
+         for d, s in ((0.05, 11), (0.03, 12))]
+    b = [random_sparse_tensor(spec.shape, d, seed=s)
+         for d, s in ((0.04, 13), (0.02, 14))]
+    bucket = bucket_nnz(max(c.nnz for c in a + b), base=64)
+    p.batch(a, pad_nnz_to=bucket)  # warm: compiles the (k=2, bucket) program
+    traces = _total_traces()
+    got = p.batch(b, pad_nnz_to=bucket)  # different batch max, same bucket
+    assert _total_traces() == traces, "bucketed flush retraced"
+    for c, g in zip(b, got):
+        s = p(c)
+        np.testing.assert_allclose(np.asarray(g.core), np.asarray(s.core),
+                                   rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="drop nonzeros"):
+        p.batch(a, pad_nnz_to=1)
+
+
+def test_batch_accepts_typed_and_raw_prng_keys():
+    """Both key styles flow through the host-side batched key assembly and
+    land on the same init as the per-tensor path."""
+    spec = _spec(shape=(10, 8, 6), ranks=(2, 2, 2), n_iter=2)
+    p = tucker.plan(spec)
+    coos = [random_sparse_tensor(spec.shape, 0.06, seed=s) for s in (21, 22)]
+    got = p.batch(coos, keys=[jax.random.key(7), jax.random.PRNGKey(9)])
+    for c, k, g in zip(coos, (jax.random.PRNGKey(7), jax.random.PRNGKey(9)), got):
+        ref = p(c, key=k)
+        np.testing.assert_allclose(np.asarray(g.core), np.asarray(ref.core),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_batch_nondefault_key_impl_keeps_reproducibility():
+    """Non-threefry typed keys (rbg) generate different streams under vmap,
+    so batching them must fall back to sequential calls — same key, same
+    result, never a silently different init (or a key_data shape crash)."""
+    spec = _spec(shape=(10, 8, 6), ranks=(2, 2, 2), n_iter=2)
+    p = tucker.plan(spec)
+    coos = [random_sparse_tensor(spec.shape, 0.06, seed=s) for s in (23, 24)]
+    keys = [jax.random.key(7, impl="rbg"), jax.random.key(9, impl="rbg")]
+    d0 = hooi.SWEEP_DISPATCH_COUNTS[("xla", "scan")]
+    got = p.batch(coos, keys=keys)
+    assert hooi.SWEEP_DISPATCH_COUNTS[("xla", "scan")] - d0 == len(coos)
+    for c, k, g in zip(coos, keys, got):
+        ref = p(c, key=k)
+        np.testing.assert_array_equal(np.asarray(g.core), np.asarray(ref.core))
 
 
 def test_batch_rejects_mixed_shapes_and_dense_specs():

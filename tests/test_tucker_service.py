@@ -1,0 +1,590 @@
+"""TuckerService: micro-batching, parity, amortization, lifecycle.
+
+Determinism strategy: the MicroBatcher takes time as an argument (tested
+with a fake clock, no sleeps), and the service tests avoid waiting out
+``max_wait_ms`` wherever possible — either the queue fills (``max_batch``)
+or ``flush()`` drains inline on the calling thread. The one timeout-path
+test uses a short wait and a generous result timeout.
+
+The ``serve_soak`` tier at the bottom is the CI amortization gate: a few
+hundred mixed-nnz requests must produce far fewer dispatches than requests,
+with every sampled result allclose to a sequential ``tucker.decompose``.
+"""
+import threading
+import time
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.coo import SparseCOO
+
+from repro import tucker
+from repro.serve import (
+    BatchKey,
+    LatencyTracker,
+    MicroBatcher,
+    ServiceConfig,
+    ServiceMetrics,
+    TuckerService,
+)
+from repro.serve.batching import FLUSH_DRAIN, FLUSH_FULL, FLUSH_TIMEOUT
+from repro.sparse.generators import random_sparse_tensor
+from repro.sparse.layout import bucket_nnz, pad_coo_batch
+
+
+SPEC = tucker.TuckerSpec(
+    shape=(14, 12, 10), ranks=(3, 2, 2), method="gram", n_iter=2
+)
+
+
+def _coos(n, density=0.05, seed0=100, shape=SPEC.shape):
+    """n same-nnz tensors (same density+shape => same nnz => one compiled
+    program per batch size — keeps the suite fast on cold jit caches)."""
+    return [random_sparse_tensor(shape, density, seed=seed0 + i) for i in range(n)]
+
+
+@pytest.fixture(autouse=True)
+def _unbounded_plan_cache():
+    """Tests tweak the global plan-cache capacity; always restore."""
+    yield
+    tucker.set_plan_cache_capacity(None)
+
+
+# ---------------------------------------------------------------------------
+# bucket_nnz: deterministic boundary tests (satellite).
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_boundaries_power_of_two():
+    assert bucket_nnz(0) == 512  # empty still pads to one bucket
+    assert bucket_nnz(1) == 512
+    assert bucket_nnz(512) == 512  # boundary is inclusive
+    assert bucket_nnz(513) == 1024  # one past the boundary jumps a bucket
+    assert bucket_nnz(1024) == 1024
+    assert bucket_nnz(1025) == 2048
+
+
+def test_bucket_boundaries_fractional_growth():
+    # base 100, growth 1.5: 100, 150, 225, 338 (ceil'd), ...
+    assert bucket_nnz(100, base=100, growth=1.5) == 100
+    assert bucket_nnz(101, base=100, growth=1.5) == 150
+    assert bucket_nnz(151, base=100, growth=1.5) == 225
+    assert bucket_nnz(226, base=100, growth=1.5) == 338
+
+
+def test_bucket_validation():
+    with pytest.raises(ValueError, match="base"):
+        bucket_nnz(5, base=0)
+    with pytest.raises(ValueError, match="growth"):
+        bucket_nnz(5, growth=1.0)
+    with pytest.raises(ValueError, match="nnz"):
+        bucket_nnz(-1)
+
+
+def test_pad_coo_batch_target_and_errors():
+    coos = _coos(2)
+    idx, val = pad_coo_batch(coos, target_nnz=coos[0].nnz + 7)
+    assert idx.shape == (2, coos[0].nnz + 7, 3)
+    assert val.shape == (2, coos[0].nnz + 7)
+    with pytest.raises(ValueError, match="drop nonzeros"):
+        pad_coo_batch(coos, target_nnz=coos[0].nnz - 1)
+    with pytest.raises(ValueError, match="at least one"):
+        pad_coo_batch([])
+    with pytest.raises(ValueError, match="same-shape"):
+        pad_coo_batch([coos[0], random_sparse_tensor((14, 12, 11), 0.05, seed=9)])
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher: pure queue plane with a fake clock.
+# ---------------------------------------------------------------------------
+
+
+def _key(bucket=512, spec=SPEC):
+    return BatchKey(spec=spec, bucket=bucket)
+
+
+def test_batcher_flushes_full_queue_immediately():
+    b = MicroBatcher(max_batch=3, max_wait_s=100.0)
+    k = _key()
+    for i in range(3):
+        b.add(k, f"r{i}", now=float(i))
+    flush = b.pop_ready(now=2.0)  # no wait needed: the queue is full
+    assert flush is not None and flush.reason == FLUSH_FULL
+    assert flush.items == ("r0", "r1", "r2")
+    assert len(b) == 0 and b.pop_ready(now=2.0) is None
+
+
+def test_batcher_timeout_flush_earliest_deadline_first():
+    b = MicroBatcher(max_batch=8, max_wait_s=1.0)
+    early, late = _key(bucket=512), _key(bucket=1024)
+    b.add(late, "late", now=0.5)
+    b.add(early, "early", now=0.0)
+    assert b.pop_ready(now=0.9) is None  # nobody waited 1s yet
+    assert b.next_deadline() == pytest.approx(1.0)  # oldest enqueue + wait
+    flush = b.pop_ready(now=1.1)
+    assert flush.reason == FLUSH_TIMEOUT and flush.items == ("early",)
+    assert b.pop_ready(now=1.2) is None  # 'late' is due at 1.5
+    assert b.pop_ready(now=1.5).items == ("late",)
+
+
+def test_batcher_pop_caps_at_max_batch_and_keeps_remainder():
+    b = MicroBatcher(max_batch=2, max_wait_s=0.0)
+    k = _key()
+    for i in range(5):
+        b.add(k, i, now=0.0)
+    sizes = []
+    while True:
+        f = b.pop_ready(now=0.0)
+        if f is None:
+            break
+        sizes.append(len(f.items))
+    assert sizes == [2, 2, 1]  # FIFO, capped, remainder flushes by timeout 0
+
+
+def test_batcher_timeout_tie_between_queues():
+    """Two queues due at the SAME instant must not crash the pop (BatchKey
+    is unordered; a bare tuple-min would compare keys on the tie) — this is
+    the scheduler thread's survival on coarse clocks."""
+    b = MicroBatcher(max_batch=8, max_wait_s=1.0)
+    b.add(_key(512), "a", now=0.0)
+    b.add(_key(1024), "b", now=0.0)
+    first = b.pop_ready(now=2.0)
+    second = b.pop_ready(now=2.0)
+    assert first is not None and second is not None
+    assert {first.items[0], second.items[0]} == {"a", "b"}
+
+
+def test_batcher_expired_deadline_beats_full_queue():
+    """A cold key past its latency bound must not be starved by a hot key
+    whose queue keeps refilling — the max_wait_ms contract under load."""
+    b = MicroBatcher(max_batch=2, max_wait_s=1.0)
+    b.add(_key(512), "cold", now=0.0)
+    b.add(_key(1024), "hot1", now=5.0)
+    b.add(_key(1024), "hot2", now=5.0)  # full, but not latency-urgent
+    f = b.pop_ready(now=5.0)
+    assert f.reason == FLUSH_TIMEOUT and f.items == ("cold",)
+    assert b.pop_ready(now=5.0).reason == FLUSH_FULL
+
+
+def test_batcher_pop_any_drains_everything():
+    b = MicroBatcher(max_batch=4, max_wait_s=100.0)
+    b.add(_key(512), "a", now=0.0)
+    b.add(_key(1024), "b", now=0.0)
+    reasons = set()
+    drained = []
+    while True:
+        f = b.pop_any()
+        if f is None:
+            break
+        reasons.add(f.reason)
+        drained.extend(f.items)
+    assert sorted(drained) == ["a", "b"] and reasons == {FLUSH_DRAIN}
+    assert b.next_deadline() is None
+
+
+def test_batcher_validation():
+    with pytest.raises(ValueError, match="max_batch"):
+        MicroBatcher(max_batch=0, max_wait_s=1.0)
+    with pytest.raises(ValueError, match="max_wait"):
+        MicroBatcher(max_batch=1, max_wait_s=float("nan"))
+
+
+# ---------------------------------------------------------------------------
+# Metrics.
+# ---------------------------------------------------------------------------
+
+
+def test_latency_tracker_percentiles():
+    t = LatencyTracker(maxlen=100)
+    assert np.isnan(t.percentile(50))
+    for ms in range(1, 101):
+        t.observe(float(ms))
+    assert t.percentile(50) == pytest.approx(50.5)
+    assert t.summary()["p99_ms"] == pytest.approx(99.01)
+    assert t.summary()["count"] == 100
+
+
+def test_service_metrics_amortization_counters():
+    m = ServiceMetrics()
+    m.on_submit(8)
+    m.on_flush(reason="full", batch_size=8, dispatches=1, nnz_real=800,
+               nnz_padded=1024, execute_ms=5.0, queue_ms=[1.0] * 8,
+               total_ms=[6.0] * 8)
+    assert m.requests_per_dispatch() == 8.0
+    assert m.padding_overhead() == pytest.approx(1024 / 800)
+    snap = m.snapshot()
+    assert snap["pending"] == 0 and snap["flushes"] == {"full": 1}
+    assert snap["batch_size_mean"] == 8.0
+
+
+# ---------------------------------------------------------------------------
+# TuckerService: parity, routing, lifecycle.
+# ---------------------------------------------------------------------------
+
+
+def test_service_full_flush_parity_and_timing():
+    coos = _coos(4)
+    cfg = ServiceConfig(max_batch=4, max_wait_ms=10_000.0, bucket_base=128)
+    with TuckerService(cfg) as svc:
+        tickets = [
+            svc.submit(c.indices, c.values, SPEC) for c in coos
+        ]  # 4th submit fills the queue -> immediate 'full' flush
+        results = [t.result(timeout=120) for t in tickets]
+        snap = svc.metrics.snapshot()
+    assert snap["dispatches"] == 1 and snap["flushes"] == {"full": 1}
+    bucket = bucket_nnz(coos[0].nnz, base=128)
+    for c, r in zip(coos, results):
+        ref = tucker.decompose(c, SPEC.ranks, method=SPEC.method,
+                               n_iter=SPEC.n_iter)
+        np.testing.assert_allclose(np.asarray(r.core), np.asarray(ref.core),
+                                   rtol=1e-5, atol=1e-5)
+        # bucket padding changes XLA's reduction tree: allclose, not bitwise
+        np.testing.assert_allclose(r.fit_history, ref.fit_history, atol=1e-5)
+        assert r.timing.batch_size == 4
+        assert r.timing.flush_reason == FLUSH_FULL
+        assert r.timing.nnz == c.nnz and r.timing.nnz_padded == bucket
+        assert r.timing.total_ms >= r.timing.queue_ms
+        assert 0.0 <= r.timing.padding_fraction < 1.0
+
+
+def test_service_flush_drains_partial_batch_inline():
+    coos = _coos(2, seed0=300)
+    with TuckerService(ServiceConfig(max_batch=8, max_wait_ms=10_000.0)) as svc:
+        tickets = [svc.submit_coo(c, SPEC) for c in coos]
+        assert not tickets[0].done()  # queue is 2/8 and nobody waited yet
+        assert svc.flush() == 2
+        assert svc.pending() == 0
+        results = [t.result(timeout=5) for t in tickets]
+    assert all(r.timing.flush_reason == FLUSH_DRAIN for r in results)
+
+
+def test_service_timeout_flush_fires():
+    coo = _coos(1, seed0=310)[0]
+    with TuckerService(ServiceConfig(max_batch=8, max_wait_ms=30.0)) as svc:
+        t = svc.submit_coo(coo, SPEC)
+        r = t.result(timeout=120)  # scheduler must wake itself up
+    assert r.timing.flush_reason == FLUSH_TIMEOUT
+    assert r.timing.batch_size == 1
+
+
+def test_service_routes_buckets_to_separate_batches():
+    # nnz 84 vs nnz 672 straddle the base-128 bucket boundary (128 vs 1024):
+    # one flush each, never padded into one another's program.
+    small = _coos(2, density=0.05, seed0=320)
+    big = _coos(2, density=0.4, seed0=330)
+    cfg = ServiceConfig(max_batch=2, max_wait_ms=10_000.0, bucket_base=128)
+    with TuckerService(cfg) as svc:
+        rs = svc.decompose_batch(small + big, SPEC, timeout=120)
+        snap = svc.metrics.snapshot()
+    assert snap["dispatches"] == 2 and snap["flushes"] == {"full": 2}
+    assert {r.timing.nnz_padded for r in rs[:2]} != {
+        r.timing.nnz_padded for r in rs[2:]
+    }
+
+
+def test_pad_coo_batch_rejects_mixed_dtypes():
+    a = _coos(1, seed0=455)[0]
+    b = SparseCOO(a.indices, a.values.astype(jnp.bfloat16), a.shape)
+    with pytest.raises(ValueError, match="common value dtype"):
+        pad_coo_batch([a, b])
+
+
+def test_service_auto_dtype_routes_precisions_apart():
+    """Under dtype='auto' the observed input dtype is part of the batch key:
+    a float32 and a bfloat16 request never share a flush (whose stacking
+    would silently promote the narrow member and break parity)."""
+    a = _coos(1, seed0=460)[0]
+    b0 = _coos(1, seed0=461)[0]
+    b = SparseCOO(b0.indices, b0.values.astype(jnp.bfloat16), b0.shape)
+    with TuckerService(ServiceConfig(max_batch=2, max_wait_ms=10_000.0)) as svc:
+        ta = svc.submit_coo(a, SPEC)
+        tb = svc.submit_coo(b, SPEC)
+        assert svc.pending() == 2  # different dtype queues: neither is full
+        svc.flush()
+        ra, rb = ta.result(timeout=120), tb.result(timeout=120)
+    assert ra.timing.batch_size == 1 and rb.timing.batch_size == 1
+
+
+def test_service_routes_specs_to_separate_batches():
+    other = tucker.TuckerSpec(shape=SPEC.shape, ranks=(2, 2, 2), method="gram",
+                              n_iter=2)
+    coos = _coos(2, seed0=340)
+    with TuckerService(ServiceConfig(max_batch=2, max_wait_ms=10_000.0)) as svc:
+        ta = svc.submit_coo(coos[0], SPEC)
+        tb = svc.submit_coo(coos[1], other)
+        svc.flush()
+        ra, rb = ta.result(timeout=5), tb.result(timeout=5)
+    assert ra.spec.ranks == (3, 2, 2) and rb.spec.ranks == (2, 2, 2)
+    assert ra.timing.batch_size == 1 and rb.timing.batch_size == 1
+
+
+def test_service_per_request_keys_respected():
+    coo = _coos(1, seed0=350)[0]
+    with TuckerService(ServiceConfig(max_batch=2, max_wait_ms=10_000.0)) as svc:
+        t0 = svc.submit_coo(coo, SPEC, key=jax.random.PRNGKey(7))
+        t1 = svc.submit_coo(coo, SPEC, key=jax.random.PRNGKey(8))
+        r0, r1 = t0.result(timeout=120), t1.result(timeout=120)
+    ref = tucker.plan(SPEC)(coo, key=jax.random.PRNGKey(7))
+    np.testing.assert_allclose(np.asarray(r0.core), np.asarray(ref.core),
+                               rtol=1e-5, atol=1e-5)
+    # different init keys genuinely flowed through the batched init
+    assert not np.allclose(np.asarray(r0.factors[0]), np.asarray(r1.factors[0]))
+
+
+def test_service_submit_validation():
+    coo = _coos(1, seed0=360)[0]
+    dense_spec = tucker.TuckerSpec(shape=SPEC.shape, ranks=SPEC.ranks,
+                                   algorithm="dense")
+    with TuckerService(ServiceConfig(max_wait_ms=10_000.0)) as svc:
+        with pytest.raises(ValueError, match="algorithm='sparse'"):
+            svc.submit_coo(coo, dense_spec)
+        with pytest.raises(ValueError, match="does not match the spec"):
+            svc.submit_coo(random_sparse_tensor((14, 12, 11), 0.05, seed=1), SPEC)
+        with pytest.raises(ValueError, match="zero stored nonzeros"):
+            svc.submit(np.zeros((0, 3), np.int32), np.zeros((0,), np.float32),
+                       SPEC)
+
+
+def test_service_nonbatchable_spec_warns_but_serves():
+    pyspec = tucker.TuckerSpec(shape=SPEC.shape, ranks=SPEC.ranks,
+                               method="gram", n_iter=2, pipeline="python")
+    coos = _coos(2, seed0=370)
+    with TuckerService(ServiceConfig(max_batch=2, max_wait_ms=10_000.0)) as svc:
+        with pytest.warns(RuntimeWarning, match="sequential"):
+            tickets = [svc.submit_coo(c, pyspec) for c in coos]
+        results = [t.result(timeout=120) for t in tickets]
+        snap = svc.metrics.snapshot()
+    # correct, but no amortization: one dispatch per sweep per member
+    assert snap["dispatches"] == 2 * pyspec.n_iter
+    for c, r in zip(coos, results):
+        ref = tucker.plan(pyspec)(c)
+        np.testing.assert_array_equal(r.fit_history, ref.fit_history)
+        # the fallback runs unpadded — metrics must say so, not the bucket
+        assert r.timing.nnz_padded == c.nnz
+    assert snap["padding_overhead"] == pytest.approx(1.0)
+
+
+def test_service_key_fallback_padding_metrics_honest():
+    """Non-vmappable PRNG keys (rbg impl) push a batchable spec onto the
+    sequential fallback — the padding metrics must describe that unpadded
+    execution, not the bucket the batch would have padded to."""
+    coos = _coos(2, seed0=450)
+    with TuckerService(ServiceConfig(max_batch=2, max_wait_ms=10_000.0)) as svc:
+        tickets = [
+            svc.submit_coo(c, SPEC, key=jax.random.key(i, impl="rbg"))
+            for i, c in enumerate(coos)
+        ]
+        results = [t.result(timeout=120) for t in tickets]
+        snap = svc.metrics.snapshot()
+    assert snap["dispatches"] == 2  # one per member: no shared program
+    for c, r in zip(coos, results):
+        assert r.timing.nnz_padded == c.nnz
+    assert snap["padding_overhead"] == pytest.approx(1.0)
+
+
+def test_service_close_rejects_new_and_drains_pending():
+    coos = _coos(2, seed0=380)
+    svc = TuckerService(ServiceConfig(max_batch=8, max_wait_ms=10_000.0))
+    tickets = [svc.submit_coo(c, SPEC) for c in coos]
+    svc.close(drain=True)
+    for t in tickets:
+        assert t.result(timeout=5).timing.flush_reason == FLUSH_DRAIN
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit_coo(coos[0], SPEC)
+    svc.close()  # idempotent
+
+
+def test_service_close_without_drain_fails_tickets():
+    coo = _coos(1, seed0=390)[0]
+    svc = TuckerService(ServiceConfig(max_batch=8, max_wait_ms=10_000.0))
+    t = svc.submit_coo(coo, SPEC)
+    svc.close(drain=False)
+    with pytest.raises(RuntimeError, match="closed before execution"):
+        t.result(timeout=5)
+    assert svc.metrics.snapshot()["failed"] == 1
+
+
+def test_close_without_drain_does_not_execute_ready_batches(monkeypatch):
+    """close(drain=False) must fail queued-but-ready batches, not run them:
+    an in-flight batch finishes, a full queue behind it gets RuntimeError."""
+    coos = _coos(4, seed0=440)
+    svc = TuckerService(ServiceConfig(max_batch=2, max_wait_ms=10_000.0))
+    gate = threading.Event()
+    real_batch = tucker.TuckerPlan.batch
+
+    def gated_batch(self, *a, **kw):
+        gate.wait(30)
+        return real_batch(self, *a, **kw)
+
+    monkeypatch.setattr(tucker.TuckerPlan, "batch", gated_batch)
+    t0 = svc.submit_coo(coos[0], SPEC)
+    t1 = svc.submit_coo(coos[1], SPEC)  # full -> scheduler pops, blocks on gate
+    for _ in range(500):
+        if svc.pending() == 0:
+            break
+        time.sleep(0.01)
+    assert svc.pending() == 0  # first batch is in flight
+    t2 = svc.submit_coo(coos[2], SPEC)
+    t3 = svc.submit_coo(coos[3], SPEC)  # a second FULL (ready) batch queued
+    closer = threading.Thread(target=lambda: svc.close(drain=False))
+    closer.start()
+    time.sleep(0.05)
+    gate.set()  # let the in-flight batch finish
+    closer.join(60)
+    assert not closer.is_alive()
+    assert t0.result(timeout=5) is not None and t1.result(timeout=5) is not None
+    for t in (t2, t3):  # ready but never executed
+        with pytest.raises(RuntimeError, match="closed before execution"):
+            t.result(timeout=5)
+
+
+def test_ticket_timeout():
+    coo = _coos(1, seed0=395)[0]
+    with TuckerService(ServiceConfig(max_batch=8, max_wait_ms=10_000.0)) as svc:
+        t = svc.submit_coo(coo, SPEC)
+        with pytest.raises(TimeoutError):
+            t.result(timeout=0.05)
+        svc.flush()
+        assert t.exception(timeout=5) is None
+
+
+def test_service_survives_execution_failure(monkeypatch):
+    """A failing batch fails its tickets but not the scheduler."""
+    coos = _coos(2, seed0=400)
+    boom = RuntimeError("injected engine failure")
+    with TuckerService(ServiceConfig(max_batch=2, max_wait_ms=10_000.0)) as svc:
+        monkeypatch.setattr(
+            tucker.TuckerPlan, "batch",
+            lambda self, *a, **k: (_ for _ in ()).throw(boom),
+        )
+        tickets = [svc.submit_coo(c, SPEC) for c in coos]
+        for t in tickets:
+            assert t.exception(timeout=120) is boom
+        monkeypatch.undo()
+        ok = svc.submit_coo(coos[0], SPEC)  # scheduler still alive
+        svc.flush()
+        assert ok.result(timeout=120).timing is not None
+    assert svc.metrics.snapshot()["failed"] == 2
+
+
+def test_concurrent_submitters_share_plans_and_get_parity():
+    """Many threads hammering submit: every result correct, plan built once
+    (the plan-cache lock satellite, exercised through the public surface)."""
+    tucker.clear_plan_cache()
+    spec = tucker.TuckerSpec(shape=(12, 10, 8), ranks=(2, 2, 2), method="gram",
+                             n_iter=2)
+    coos = _coos(12, seed0=410, shape=spec.shape)
+    misses0 = tucker.plan_cache_info()["misses"]
+    results = {}
+    with TuckerService(ServiceConfig(max_batch=4, max_wait_ms=10_000.0)) as svc:
+        def worker(i):
+            results[i] = svc.submit_coo(coos[i], spec)
+
+        threads = [threading.Thread(target=worker, args=(i,)) for i in range(12)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        svc.flush()  # whatever didn't fill a batch
+        out = {i: t.result(timeout=120) for i, t in results.items()}
+        snap = svc.metrics.snapshot()
+    assert snap["completed"] == 12
+    assert snap["dispatches"] <= 3  # ceil(12/4): full amortization
+    assert tucker.plan_cache_info()["misses"] - misses0 == 1  # built ONCE
+    ref = tucker.plan(spec)(coos[5])
+    np.testing.assert_allclose(np.asarray(out[5].core), np.asarray(ref.core),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_service_plan_cache_capacity_and_eviction_hook():
+    tucker.clear_plan_cache()
+    cfg = ServiceConfig(max_batch=1, max_wait_ms=10_000.0,
+                        plan_cache_capacity=1)
+    coo = _coos(1, seed0=420)[0]
+    specs = [
+        tucker.TuckerSpec(shape=SPEC.shape, ranks=(r, 2, 2), method="gram",
+                          n_iter=1)
+        for r in (2, 3)
+    ]
+    with TuckerService(cfg) as svc:
+        for s in specs:  # max_batch=1: each submit flushes itself
+            svc.submit_coo(coo, s).result(timeout=120)
+        assert tucker.plan_cache_info()["capacity"] == 1
+        assert svc.metrics.snapshot()["plan_evictions"] >= 1
+    assert tucker.plan_cache_info()["size"] <= 1
+    # the capacity knob is process-global: close() must restore what it found
+    assert tucker.plan_cache_info()["capacity"] is None
+
+
+def test_overlapping_services_capacity_registry():
+    """Closing one capacity-setting service must not loosen the bound of a
+    still-running one — even when both configured the SAME capacity — and
+    the pre-service capacity returns only when the last holder closes."""
+    tucker.set_plan_cache_capacity(None)
+    a = TuckerService(ServiceConfig(plan_cache_capacity=8))
+    b = TuckerService(ServiceConfig(plan_cache_capacity=8))
+    try:
+        a.close()
+        assert tucker.plan_cache_info()["capacity"] == 8  # b still live
+    finally:
+        b.close()
+    assert tucker.plan_cache_info()["capacity"] is None
+
+
+def test_manual_capacity_set_survives_service_close():
+    """An operator's explicit set_plan_cache_capacity() while a service is
+    live wins over the service's restore-on-close."""
+    tucker.set_plan_cache_capacity(None)
+    svc = TuckerService(ServiceConfig(plan_cache_capacity=8))
+    try:
+        tucker.set_plan_cache_capacity(4)  # manual override mid-flight
+    finally:
+        svc.close()
+    assert tucker.plan_cache_info()["capacity"] == 4
+
+
+# ---------------------------------------------------------------------------
+# serve_soak: the CI amortization gate (also runs in tier-1; kept small).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.serve_soak
+def test_soak_mixed_nnz_parity_and_amortization():
+    """A few hundred mixed-nnz requests: every sampled result matches the
+    sequential path, and the dispatch count is far below the request count
+    (the whole point of the service)."""
+    n_requests = 240
+    rng = np.random.default_rng(0)
+    # three densities -> three nnz values spanning two buckets under base=128
+    densities = rng.choice([0.03, 0.05, 0.12], size=n_requests)
+    coos = [
+        random_sparse_tensor(SPEC.shape, float(d), seed=500 + i)
+        for i, d in enumerate(densities)
+    ]
+    cfg = ServiceConfig(max_batch=8, max_wait_ms=50.0, bucket_base=128)
+    with TuckerService(cfg) as svc:
+        tickets = [svc.submit_coo(c, SPEC) for c in coos]
+        results = [t.result(timeout=600) for t in tickets]
+        snap = svc.metrics.snapshot()
+    assert snap["completed"] == n_requests and snap["failed"] == 0
+    # far fewer dispatches than requests: >= 4x amortization on average
+    assert snap["dispatches"] <= n_requests // 4, snap
+    assert snap["requests_per_dispatch"] >= 4.0
+    # bucketing bounds padding waste: growth-factor for nnz >= base,
+    # base/nnz for sub-base requests (which pad up to one full bucket)
+    min_nnz = min(c.nnz for c in coos)
+    bound = max(cfg.bucket_growth, cfg.bucket_base / min_nnz)
+    assert snap["padding_overhead"] <= bound + 1e-9
+    # parity on a deterministic sample across all densities
+    for i in (0, 7, 63, 128, 239):
+        ref = tucker.decompose(coos[i], SPEC.ranks, method=SPEC.method,
+                               n_iter=SPEC.n_iter)
+        np.testing.assert_allclose(
+            np.asarray(results[i].core), np.asarray(ref.core),
+            rtol=1e-4, atol=1e-4,
+        )
+        np.testing.assert_allclose(results[i].fit_history, ref.fit_history,
+                                   atol=1e-5)
