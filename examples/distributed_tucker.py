@@ -2,10 +2,14 @@
 
     PYTHONPATH=src python examples/distributed_tucker.py
 
-Runs the shard_map Kron-accumulation HOOI (nonzeros sharded, factors
-replicated, one psum per mode per sweep) on whatever devices exist, and
-checks it against the single-device reference. On the production pod the
-same code runs on the (pod, data, model) mesh — see launch/dryrun.py.
+    # multi-device on a CPU host:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/distributed_tucker.py
+
+Plans a ``TuckerSpec`` with ``shard=ShardSpec(num_devices=N)``: nonzeros
+sharded over the mesh, factors replicated, one psum per mode per sweep —
+and the whole multi-sweep loop compiled as ONE shard_map dispatch. On the
+production pod the same spec runs on the real device mesh.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -13,24 +17,27 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 from repro import tucker
-from repro.core.distributed import hooi_sparse_distributed
-from repro.launch.mesh import make_host_mesh
 from repro.sparse.generators import low_rank_sparse_tensor
 
 
 def main():
     coo, _ = low_rank_sparse_tensor((60, 50, 40), (4, 3, 2), 0.1, seed=0)
     print(f"sparse tensor {coo.shape}, nnz={coo.nnz} (density {coo.density():.3f})")
-    mesh = make_host_mesh()
-    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    n_dev = len(jax.devices())
+    print(f"devices: {n_dev} ({jax.default_backend()})")
 
     ref = tucker.decompose(coo, (4, 3, 2), n_iter=3, method="gram")
-    dist = hooi_sparse_distributed(coo, (4, 3, 2), mesh, n_iter=3, method="gram",
-                                   nnz_axes=("data",))
+    spec = tucker.TuckerSpec(
+        shape=coo.shape, ranks=(4, 3, 2), method="gram", n_iter=3,
+        shard=tucker.ShardSpec(num_devices=n_dev),
+    )
+    dist = tucker.plan(spec)(coo)
     print(f"single-device rel_error: {float(ref.rel_error):.6f}")
-    print(f"distributed  rel_error: {float(dist.rel_error):.6f}")
-    print("per-sweep collective: one psum of Y_(n) per mode "
-          "(independent of nnz -> scales to thousands of nodes)")
+    print(f"sharded ({n_dev} dev) rel_error: {float(dist.rel_error):.6f} "
+          f"in {dist.dispatches} dispatch")
+    print(f"per-sweep collective: {dist.collective_bytes_per_sweep} bytes "
+          f"(N psums of Y_(n), independent of nnz -> scales to thousands of "
+          f"nodes); shard imbalance {dist.shard_imbalance:.3f}")
 
 
 if __name__ == "__main__":

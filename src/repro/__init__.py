@@ -8,6 +8,7 @@ under :mod:`repro.core`, kernels under :mod:`repro.kernels`.
 from repro import tucker
 from repro.core.coo import SparseCOO
 from repro.tucker import (
+    ShardSpec,
     TuckerPlan,
     TuckerResult,
     TuckerSpec,
@@ -16,6 +17,7 @@ from repro.tucker import (
 )
 
 __all__ = [
+    "ShardSpec",
     "SparseCOO",
     "TuckerPlan",
     "TuckerResult",

@@ -15,108 +15,57 @@ dataflow on the TPU mesh:
 
 The per-sweep communication is N psums of I_n x prod(R_t) f32 — independent
 of nnz, which is exactly why the scheme scales to thousands of nodes: compute
-scales with nnz/devices while collective bytes stay constant.
+scales with nnz/devices while collective bytes stay constant
+(:func:`psum_bytes_per_sweep` is that invariant as a number, reported per
+call as ``TuckerResult.collective_bytes_per_sweep``).
+
+The execution path lives in the plan/execute pipeline now: a
+:class:`~repro.tucker.spec.TuckerSpec` with ``shard=ShardSpec(...)`` compiles
+the whole multi-sweep loop as ONE shard_map-wrapped scan program
+(``core.hooi.sharded_scan_program``). The eager per-sweep driver this module
+used to own (``hooi_sparse_distributed``) is a deprecation shim over it.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.coo import SparseCOO
-from repro.core.hooi import effective_ranks, init_factors
-from repro.core.kron import kron_rows
-from repro.core.qrp import qrp, svd_factor
-from repro.core.ttm import ttm_unfolded
-from repro.core.coo import fold_dense
-from repro.utils.compat import shard_map
+from repro.sparse.layout import build_shard_schedule
+
+
+def psum_bytes_per_sweep(
+    shape: Sequence[int], ranks: Sequence[int], dtype=np.float32
+) -> int:
+    """Collective payload of one ALS sweep: N psums, one per mode, each of
+    the full partial unfolding Y_(n) — I_n x prod_{t != n} R_t elements at
+    the program's working precision (f32, or f64 under the x64 flag). The
+    quantity is independent of nnz (the scaling invariant of the scheme)."""
+    shape, ranks = tuple(shape), tuple(ranks)
+    itemsize = int(np.dtype(dtype).itemsize)
+    total = 0
+    for mode, dim in enumerate(shape):
+        k = int(np.prod([r for t, r in enumerate(ranks) if t != mode]))
+        total += dim * k * itemsize
+    return total
 
 
 def shard_nonzeros(
     coo: SparseCOO, mesh: jax.sharding.Mesh, nnz_axes: Tuple[str, ...]
 ) -> SparseCOO:
     """Pad nnz to a multiple of the nnz-axis size and device_put the COO
-    arrays sharded on their leading (nnz) dimension."""
-    n_shards = int(np.prod([mesh.shape[a] for a in nnz_axes]))
-    target = ((coo.nnz + n_shards - 1) // n_shards) * n_shards
-    padded = coo.pad_to(max(target, n_shards))
-    idx = jax.device_put(padded.indices, NamedSharding(mesh, P(nnz_axes, None)))
-    val = jax.device_put(padded.values, NamedSharding(mesh, P(nnz_axes)))
-    return SparseCOO(idx, val, padded.shape)
+    arrays sharded on their leading (nnz) dimension.
 
-
-def _local_partial_y(
-    indices: jax.Array,
-    values: jax.Array,
-    factors: Sequence[jax.Array],
-    skip_mode: int,
-    dim_n: int,
-) -> jax.Array:
-    """Kron-accumulation over the local shard of nonzeros (Alg. 2 line 5)."""
-    n = len(factors)
-    rows = []
-    for t in range(n - 1, -1, -1):
-        if t == skip_mode:
-            continue
-        rows.append(factors[t][indices[:, t]])
-    k = kron_rows(rows)
-    contrib = k.astype(jnp.float32) * values.astype(jnp.float32)[:, None]
-    out = jnp.zeros((dim_n, k.shape[1]), dtype=jnp.float32)
-    return out.at[indices[:, skip_mode]].add(contrib)
-
-
-def make_distributed_sweep(
-    mesh: jax.sharding.Mesh,
-    shape: Sequence[int],
-    ranks: Sequence[int],
-    nnz_axes: Tuple[str, ...] = ("data",),
-    method: str = "gram",
-):
-    """Build a jitted one-sweep function over ``mesh``.
-
-    Returns ``sweep(indices, values, factors) -> (factors, core)`` where
-    indices/values are nnz-sharded and factors replicated.
+    Validates that every ``nnz_axes`` name is a mesh axis up front (a missing
+    name used to surface as an opaque ``KeyError`` deep in ``device_put``).
+    The padding math and the one-time ``device_put`` live in
+    :func:`repro.sparse.layout.build_shard_schedule`, shared with the
+    plan/execute pipeline's :class:`~repro.sparse.layout.ShardSchedule`.
     """
-    ndim = len(shape)
-    ranks = [min(int(r), int(s)) for r, s in zip(ranks, shape)]
-    all_axes = tuple(mesh.axis_names)
-
-    def sweep_body(indices, values, *factors):
-        factors = list(factors)
-        y_n = None
-        for mode in range(ndim):
-            y_local = _local_partial_y(indices, values, factors, mode, shape[mode])
-            y_n = jax.lax.psum(y_local, nnz_axes)
-            factors[mode] = _factor_update_replicated(y_n, ranks[mode], method)
-        g_n = ttm_unfolded(y_n.T, factors[ndim - 1].T).T
-        core = fold_dense(g_n, ndim - 1, list(ranks))
-        return tuple(factors) + (core,)
-
-    def _factor_update_replicated(y_n, r, method):
-        if method == "svd":
-            return svd_factor(y_n, r)
-        return qrp(y_n, r, method=method)
-
-    in_specs = (
-        P(nnz_axes, None),  # indices
-        P(nnz_axes),  # values
-    ) + tuple(P(None, None) for _ in range(ndim))
-    out_specs = tuple(P(None, None) for _ in range(ndim)) + (
-        P(*([None] * ndim)),
-    )
-
-    fn = shard_map(
-        sweep_body,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        check_vma=False,
-    )
-    return jax.jit(fn)
+    sched = build_shard_schedule(coo, mesh, tuple(nnz_axes))
+    return SparseCOO(sched.indices, sched.values, coo.shape)
 
 
 def hooi_sparse_distributed(
@@ -129,36 +78,52 @@ def hooi_sparse_distributed(
     key: Optional[jax.Array] = None,
 ):
     """Data-parallel Alg. 2 over an arbitrary mesh. Matches the single-device
-    ``hooi_sparse`` bit-for-bit up to psum reduction order."""
-    from repro.tucker import TuckerSpec  # local import to avoid cycle
-    from repro.tucker.result import TuckerResult
+    ``hooi_sparse`` bit-for-bit up to psum reduction order.
 
-    key = key if key is not None else jax.random.PRNGKey(0)
-    nnz_axes = nnz_axes or tuple(mesh.axis_names)
-    sharded = shard_nonzeros(coo, mesh, nnz_axes)
-    # same coupled clamping as the single-device path, so the attached spec's
-    # ranks always agree with the core/factor shapes actually produced.
-    ranks = effective_ranks(coo.shape, ranks)
-    factors = init_factors(coo.shape, ranks, key)
-    sweep = make_distributed_sweep(
-        mesh, coo.shape, ranks, nnz_axes=nnz_axes, method=method
-    )
-    xnorm2 = jnp.square(coo.norm())
-    hist = []
-    core = None
-    for _ in range(n_iter):
-        out = sweep(sharded.indices, sharded.values, *factors)
-        factors, core = list(out[:-1]), out[-1]
-        err = jnp.sqrt(
-            jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)
-        ) / jnp.sqrt(xnorm2)
-        hist.append(float(err))
-    from repro.core.reconstruct import compression_ratio
+    .. deprecated:: use ``repro.tucker`` with
+       ``TuckerSpec(shard=ShardSpec(num_devices=...))`` — the planned path
+       compiles the whole multi-sweep loop into one shard_map program (one
+       dispatch per decompose instead of one per sweep) and caches it. This
+       shim flattens ``mesh``'s ``nnz_axes`` into an equivalent 1-axis nnz
+       mesh over the CALLER's devices (nnz-axes order preserved; axes not in
+       ``nnz_axes`` collapse to the first device of each replica group, whose
+       extra copies only duplicated work) and delegates via
+       ``tucker.plan(spec, mesh=...)``.
+    """
+    import warnings
 
-    spec = TuckerSpec(shape=tuple(coo.shape), ranks=tuple(ranks),
-                      method=method, engine="xla", n_iter=n_iter)
-    return TuckerResult.from_history(
-        core, factors, np.asarray(hist), engine="xla", spec=spec,
-        compression_ratio=compression_ratio(spec.shape, spec.ranks),
-        dispatches=n_iter,
+    from repro import tucker  # local import to avoid cycle
+
+    warnings.warn(
+        "hooi_sparse_distributed is deprecated; use repro.tucker.plan with "
+        "TuckerSpec(shard=ShardSpec(num_devices=...)).",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    nnz_axes = tuple(nnz_axes) if nnz_axes is not None else tuple(mesh.axis_names)
+    missing = [a for a in nnz_axes if a not in mesh.axis_names]
+    if missing:
+        raise ValueError(
+            f"nnz axes {missing} are not mesh axes: the mesh has "
+            f"{tuple(mesh.axis_names)}"
+        )
+    n_shards = int(np.prod([mesh.shape[a] for a in nnz_axes]))
+    # keep the caller's device placement: transpose to nnz-axes-major order,
+    # drop the replica axes (first device of each group), flatten to 1 axis.
+    names = tuple(mesh.axis_names)
+    keep = [names.index(a) for a in nnz_axes]
+    drop = [i for i in range(len(names)) if names[i] not in nnz_axes]
+    devs = np.transpose(np.asarray(mesh.devices), keep + drop).reshape(
+        n_shards, -1
+    )[:, 0]
+    shard = tucker.ShardSpec(num_devices=n_shards)
+    flat_mesh = jax.sharding.Mesh(devs, (shard.axis,))
+    spec = tucker.TuckerSpec(
+        shape=tuple(coo.shape),
+        ranks=tuple(ranks),
+        method=method,
+        engine="xla",
+        n_iter=n_iter,
+        shard=shard,
+    )
+    return tucker.plan(spec, mesh=flat_mesh)(coo, key=key)

@@ -32,9 +32,11 @@ from repro.core.coo import SparseCOO
 from repro.sparse.layout import (
     DeviceSchedule,
     KronReusePlan,
+    ShardSchedule,
     SortedCOO,
     build_kron_reuse,
     build_mode_layout,
+    build_shard_schedule,
 )
 
 ENGINES = ("xla", "pallas", "auto")
@@ -98,12 +100,23 @@ class SweepEngine:
     dev_schedules: Dict[int, Optional[DeviceSchedule]] = dataclasses.field(
         default_factory=dict
     )
+    # (mesh, nnz_axes) -> ShardSchedule: the bound tensor's nonzeros padded
+    # and device_put once per mesh (the sharded pipeline's analogue of
+    # dev_schedules). Invalidated by _bind like every other schedule cache.
+    shard_schedules: Dict[tuple, ShardSchedule] = dataclasses.field(
+        default_factory=dict
+    )
     # weakref to the indices array the cached schedules were built from: a
     # live referent makes the identity check below sound (no id reuse) without
     # pinning a rebound-away tensor (and its device buffer) in memory. A dead
     # ref simply forces a rebuild.
     _bound_indices: Optional["weakref.ref"] = None
     _bound_shape: Optional[tuple] = None
+    # the shard schedules additionally embed the VALUES array (the mode
+    # schedules are index-derived only), so they get their own values-identity
+    # guard: same indices + new values must rebuild, never silently contract
+    # the old tensor's values.
+    _shard_values: Optional["weakref.ref"] = None
 
     # -- schedule caches --------------------------------------------------
     def _bind(self, coo: SparseCOO) -> None:
@@ -115,13 +128,15 @@ class SweepEngine:
             self.layouts.clear()
             self.kron_plans.clear()
             self.dev_schedules.clear()
+            self.shard_schedules.clear()
 
             # when the bound tensor dies, drop its derived schedules too —
             # they are O(nnz) host+device memory of the same magnitude as the
             # tensor. The callback closes over the dicts, not the engine, so
             # it cannot extend the engine's lifetime.
             def _release(_ref, caches=(self.layouts, self.kron_plans,
-                                       self.dev_schedules)):
+                                       self.dev_schedules,
+                                       self.shard_schedules)):
                 for c in caches:
                     c.clear()
 
@@ -163,6 +178,28 @@ class SweepEngine:
                 # the plain-XLA path needs no schedule: not a build.
                 self.dev_schedules[mode] = None
         return self.dev_schedules[mode]
+
+    def shard_schedule(
+        self, coo: SparseCOO, mesh, nnz_axes, pad_nnz_to: Optional[int] = None
+    ) -> ShardSchedule:
+        """The tensor's nonzeros padded to an even shard multiple (at least
+        ``pad_nnz_to`` when given — shape-stable programs across mixed-nnz
+        serving flushes) and ``device_put`` with a ``NamedSharding`` over
+        ``nnz_axes`` — exactly once per (tensor, mesh, pad target): what the
+        compiled shard_map pipeline (``core.hooi.build_sharded_program``)
+        consumes every sweep."""
+        self._bind(coo)
+        bound_vals = self._shard_values() if self._shard_values is not None else None
+        if bound_vals is not coo.values:
+            self.shard_schedules.clear()
+            self._shard_values = weakref.ref(coo.values)
+        key = (mesh, tuple(nnz_axes), pad_nnz_to)
+        if key not in self.shard_schedules:
+            self.shard_schedules[key] = build_shard_schedule(
+                coo, mesh, tuple(nnz_axes), target_nnz=pad_nnz_to
+            )
+            self.schedule_builds += 1
+        return self.shard_schedules[key]
 
     def resolved_interpret(self) -> bool:
         """The kernel interpret flag this engine will actually run with

@@ -218,50 +218,27 @@ def _jitted_sweep(indices, values, factors, *, shape, ranks, method):
 # ---------------------------------------------------------------------------
 
 
-def _scan_sweeps_impl(
-    indices,
-    values,
+def _sweep_scan(
+    mode_unfolding,
+    core_unfolding,
     factors,
     xnorm2,
     tol,
-    scheds,
     *,
-    shape,
     ranks,
     method,
     n_iter,
-    engine_name,
-    interpret,
-    use_reuse,
+    core_dtype,
 ):
-    # trace-time only: cache hits never reach this line.
-    SWEEP_TRACE_COUNTS[(engine_name, shape, tuple(ranks), method, n_iter)] += 1
-    n = len(shape)
+    """The scan-over-sweeps skeleton shared by every compiled pipeline
+    (single-device, vmapped batch, shard_map mesh): ``n_iter`` cond-masked
+    ALS sweeps with the dynamic-``tol`` early exit, parameterized over how
+    one mode unfolding / core update executes. Keeping the skeleton single
+    means the sharded program inherits tol semantics, dtype pinning and the
+    skip sentinel by construction — parity is structural, not retested per
+    pipeline."""
+    n = len(factors)
     init_dtypes = tuple(f.dtype for f in factors)
-    # working precision of the core carry: float64 inputs keep float64 (parity
-    # with the per-sweep python driver); float32 stays exactly as before.
-    core_dtype = jnp.promote_types(values.dtype, jnp.float32)
-
-    def mode_unfolding(fs, mode):
-        if engine_name == "pallas":
-            from repro.kernels import ops
-
-            return ops.sparse_ttm_chain_device(
-                indices, values, fs, mode, scheds[mode],
-                shape=shape, interpret=interpret,
-            )
-        if use_reuse:
-            return sparse_ttm_chain_reuse_device(
-                indices, values, fs, mode, scheds[mode], shape=shape
-            )
-        return sparse_ttm_chain(SparseCOO(indices, values, shape), fs, mode)
-
-    def core_unfolding(y_n, u_last):
-        if engine_name == "pallas":
-            from repro.kernels import ops
-
-            return ops.ttm(y_n.T, u_last.T, interpret=interpret).T
-        return ttm_unfolded(y_n.T, u_last.T).T
 
     def run_sweep(carry):
         fs, _, prev_err, done = carry
@@ -300,6 +277,55 @@ def _scan_sweeps_impl(
     )
     (fs, core, _, _), hist = jax.lax.scan(body, carry0, None, length=n_iter)
     return fs, core, hist
+
+
+def _scan_sweeps_impl(
+    indices,
+    values,
+    factors,
+    xnorm2,
+    tol,
+    scheds,
+    *,
+    shape,
+    ranks,
+    method,
+    n_iter,
+    engine_name,
+    interpret,
+    use_reuse,
+):
+    # trace-time only: cache hits never reach this line.
+    SWEEP_TRACE_COUNTS[(engine_name, shape, tuple(ranks), method, n_iter)] += 1
+
+    def mode_unfolding(fs, mode):
+        if engine_name == "pallas":
+            from repro.kernels import ops
+
+            return ops.sparse_ttm_chain_device(
+                indices, values, fs, mode, scheds[mode],
+                shape=shape, interpret=interpret,
+            )
+        if use_reuse:
+            return sparse_ttm_chain_reuse_device(
+                indices, values, fs, mode, scheds[mode], shape=shape
+            )
+        return sparse_ttm_chain(SparseCOO(indices, values, shape), fs, mode)
+
+    def core_unfolding(y_n, u_last):
+        if engine_name == "pallas":
+            from repro.kernels import ops
+
+            return ops.ttm(y_n.T, u_last.T, interpret=interpret).T
+        return ttm_unfolded(y_n.T, u_last.T).T
+
+    return _sweep_scan(
+        mode_unfolding, core_unfolding, factors, xnorm2, tol,
+        ranks=ranks, method=method, n_iter=n_iter,
+        # working precision of the core carry: float64 inputs keep float64
+        # (parity with the per-sweep python driver); float32 stays as before.
+        core_dtype=jnp.promote_types(values.dtype, jnp.float32),
+    )
 
 
 # the compiled per-tensor program (tests introspect its jit cache directly).
@@ -346,6 +372,89 @@ def _batched_scan_sweeps(
     cores = tuple(core[i] for i in range(k))
     factors = tuple(tuple(f[i] for f in fs) for i in range(k))
     return cores, factors, hist
+
+
+# ---------------------------------------------------------------------------
+# Sharded scan pipeline: the multi-sweep loop as ONE shard_map-wrapped XLA
+# program over a device mesh. Nonzeros are sharded along the mesh's nnz axes
+# (see sparse.layout.ShardSchedule); inside the program each device runs the
+# Kron-accumulation over its local shard to get a *partial* Y_(n), a single
+# psum over the nnz axes completes the sum (the scatter-add is linear in the
+# nonzeros, so partial sums commute), and the small QRP factor update runs
+# replicated on every device. Per-sweep collective traffic is N psums of
+# I_n x prod_{t != n} R_t f32 — independent of nnz.
+# ---------------------------------------------------------------------------
+
+def build_sharded_program(mesh, nnz_axes, *, shape, ranks, method, n_iter):
+    """Build the one-dispatch sharded sweep program (uncached: each call
+    returns a fresh jit-wrapped callable with its own compile cache, so the
+    CALLER owns the program's lifetime — ``TuckerPlan`` holds exactly one
+    and the plan cache's LRU eviction frees the compiled executable with
+    the plan, instead of pinning it in a module-level registry forever).
+
+    Returns ``program(indices, values, factors, xnorm2, tol)`` ->
+    ``(factors, core, hist)`` where indices/values are committed with a
+    ``NamedSharding`` over ``nnz_axes`` (``sparse.layout.build_shard_schedule``)
+    and factors/xnorm2/tol are replicated. The whole multi-sweep loop —
+    cond-masked ``tol`` early exit included — is one XLA program; only the
+    fit history crosses back to host.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.utils.compat import shard_map
+
+    nnz_axes = tuple(nnz_axes)
+    shape, ranks = tuple(shape), tuple(ranks)
+    n = len(shape)
+    n_shards = int(np.prod([mesh.shape[a] for a in nnz_axes]))
+
+    def sweep_body(indices, values, factors, xnorm2, tol):
+        # per-device view: indices (nnz_padded / n_shards, N), values
+        # (nnz_padded / n_shards,), factors replicated.
+        def mode_unfolding(fs, mode):
+            partial_y = sparse_ttm_chain(
+                SparseCOO(indices, values, shape), fs, mode
+            )
+            return jax.lax.psum(partial_y, nnz_axes)
+
+        def core_unfolding(y_n, u_last):
+            return ttm_unfolded(y_n.T, u_last.T).T
+
+        return _sweep_scan(
+            mode_unfolding, core_unfolding, factors, xnorm2, tol,
+            ranks=ranks, method=method, n_iter=n_iter,
+            core_dtype=jnp.promote_types(values.dtype, jnp.float32),
+        )
+
+    in_specs = (
+        P(nnz_axes, None),  # indices
+        P(nnz_axes),  # values
+        tuple(P(None, None) for _ in range(n)),  # factors (replicated)
+        P(),  # xnorm2
+        P(),  # tol
+    )
+    out_specs = (
+        tuple(P(None, None) for _ in range(n)),  # factors
+        P(*([None] * n)),  # core
+        P(None),  # fit history
+    )
+    inner = shard_map(
+        sweep_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+
+    def traced(indices, values, factors, xnorm2, tol):
+        # trace-time only (outside the shard_map body, which jax may trace
+        # more than once per build): cache hits never reach this line.
+        SWEEP_TRACE_COUNTS[
+            ("sharded", shape, ranks, method, int(n_iter), n_shards)
+        ] += 1
+        return inner(indices, values, factors, xnorm2, tol)
+
+    # factors are donated like the single-device _scan_sweeps: the plan
+    # hands in freshly-initialized (or defensively copied) buffers, so the
+    # replicated inputs can be consumed by the replicated outputs in place.
+    return jax.jit(traced, donate_argnums=(2,))
 
 
 def hooi_sparse(

@@ -34,9 +34,9 @@ from typing import List, Optional, Sequence, Set
 from repro.core.coo import SparseCOO
 from repro.serve.batching import BatchKey, Flush, MicroBatcher
 from repro.serve.metrics import ServiceMetrics
-from repro.sparse.layout import bucket_nnz
+from repro.sparse.layout import bucket_nnz, shard_pad_nnz
 from repro.tucker.result import RequestTiming, TuckerResult
-from repro.tucker.spec import TuckerSpec
+from repro.tucker.spec import ShardSpec, TuckerSpec
 
 __all__ = ["ServiceConfig", "TuckerService", "TuckerTicket"]
 
@@ -107,6 +107,12 @@ class ServiceConfig:
         knob is process-global: the newest live service's capacity rules,
         and the pre-service capacity returns when the last one closes.
       latency_window: samples retained per latency distribution.
+      shard: a :class:`~repro.tucker.spec.ShardSpec` to construct the
+        service over a device mesh: every submitted spec that does not carry
+        its own ``shard`` is planned with this one, so requests execute as
+        single-dispatch shard_map programs across the mesh (one dispatch per
+        request — mesh parallelism replaces vmap amortization). A spec
+        submitted with an explicit ``shard`` keeps it.
     """
 
     max_batch: int = 8
@@ -115,6 +121,7 @@ class ServiceConfig:
     bucket_growth: float = 2.0
     plan_cache_capacity: Optional[int] = None
     latency_window: int = 8192
+    shard: Optional["ShardSpec"] = None
 
 
 class TuckerTicket:
@@ -225,6 +232,10 @@ class TuckerService:
                 f"TuckerService serves algorithm='sparse' specs, got "
                 f"{spec.algorithm!r} (dense inputs have no nnz axis to batch)"
             )
+        if self.config.shard is not None and spec.shard is None:
+            # the service's mesh: plans built here execute sharded; a spec
+            # that already carries its own ShardSpec wins
+            spec = dataclasses.replace(spec, shard=self.config.shard)
         if tuple(coo.shape) != spec.shape:
             raise ValueError(
                 f"input shape {tuple(coo.shape)} does not match the spec "
@@ -239,9 +250,18 @@ class TuckerService:
         if spec not in self._warned_specs:
             from repro import tucker
 
+            # plan once per new spec, synchronously: a misconfigured spec
+            # (e.g. a ShardSpec wanting more devices than are attached) must
+            # raise HERE at the submit call site, like every other
+            # validation error — not asynchronously as a whole-batch flush
+            # failure in the scheduler thread.
+            spec_plan = tucker.plan(spec)
             # plan-level check: the spec property alone misses engine
-            # resolution (e.g. 'auto' -> pallas) and prebuilt-engine overrides
-            if not tucker.plan(spec).supports_batched_dispatch:
+            # resolution (e.g. 'auto' -> pallas) and prebuilt-engine
+            # overrides. Sharded specs intentionally flush sequentially —
+            # each member is already ONE dispatch spanning the whole mesh,
+            # so the no-amortization warning would be misleading.
+            if spec.shard is None and not spec_plan.supports_batched_dispatch:
                 warnings.warn(
                     f"spec {spec.engine=} {spec.pipeline=} "
                     f"{spec.use_kron_reuse=} cannot share one batched "
@@ -399,8 +419,14 @@ class TuckerService:
             # fallbacks (e.g. non-threefry impls), so the padding metrics
             # below describe what actually executed
             vmappable = plan.batch_is_vmappable([it.key for it in items])
-            # sequential fallback: no shared program to pad for
-            pad_to = batch.key.bucket if vmappable else None
+            # sequential fallback: no shared program to pad for — except the
+            # sharded path, whose per-member shard_map program is also
+            # shape-keyed on the padded nnz: bucket-pad it too, so mixed-nnz
+            # flushes reuse one compiled program per (spec, bucket)
+            shard = plan.spec.shard
+            pad_to = (
+                batch.key.bucket if (vmappable or shard is not None) else None
+            )
             results = plan.batch(
                 [it.coo for it in items],
                 keys=[it.key for it in items],
@@ -426,8 +452,14 @@ class TuckerService:
                 batch_size=len(items),
                 nnz=it.coo.nnz,
                 # the fallback path runs each tensor at its real nnz: honest
-                # padding metrics, not the bucket it would have padded to
-                nnz_padded=batch.key.bucket if vmappable else it.coo.nnz,
+                # padding metrics, not the bucket it would have padded to.
+                # The sharded path pads to the bucket and then to the even
+                # shard multiple — report what actually streamed.
+                nnz_padded=(
+                    shard_pad_nnz(batch.key.bucket, shard.num_devices)
+                    if shard is not None
+                    else (batch.key.bucket if vmappable else it.coo.nnz)
+                ),
                 flush_reason=batch.reason,
             )
             queue_ms.append(q_ms)

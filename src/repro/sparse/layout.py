@@ -315,6 +315,105 @@ def layout_padding_fraction(layout: SortedCOO) -> float:
 # ---------------------------------------------------------------------------
 
 
+def shard_pad_nnz(nnz: int, n_shards: int) -> int:
+    """Padded nnz for even sharding: the minimal multiple of ``n_shards``
+    that is >= ``nnz`` and >= ``n_shards`` (every shard owns at least one
+    slot, even for an empty tensor). The ONE place the shard padding math
+    lives — ``core.distributed.shard_nonzeros``, :func:`build_shard_schedule`
+    and the batch padder all agree on it, and it composes with
+    :func:`bucket_nnz` (padding a bucket boundary is a fixpoint when the
+    boundary already divides evenly)."""
+    if int(n_shards) < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if int(nnz) < 0:
+        raise ValueError(f"nnz must be >= 0, got {nnz}")
+    n_shards = int(n_shards)
+    return max(((int(nnz) + n_shards - 1) // n_shards) * n_shards, n_shards)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSchedule:
+    """One tensor's nonzeros committed to a device mesh exactly once.
+
+    The sharded analogue of :class:`DeviceSchedule`: COO rows are padded to a
+    :func:`shard_pad_nnz` multiple (explicit zeros — they contribute nothing
+    to any contraction) and ``device_put`` ONCE with a ``NamedSharding`` over
+    the nnz axes, so every sweep of the compiled shard_map pipeline indexes
+    the same device buffers instead of re-sharding per call. The static
+    metadata (shard counts, imbalance) feeds the per-call counters on
+    :class:`~repro.tucker.result.TuckerResult`.
+    """
+
+    indices: jax.Array  # (nnz_padded, N), sharded P(nnz_axes, None)
+    values: jax.Array  # (nnz_padded,), sharded P(nnz_axes)
+    mesh: object  # jax.sharding.Mesh
+    nnz_axes: Tuple[str, ...]
+    n_shards: int
+    nnz: int  # real stored nonzeros (pre-padding)
+    nnz_padded: int
+
+    @property
+    def shard_counts(self) -> np.ndarray:
+        """Real (non-padding) nonzeros owned by each shard. Padding is
+        appended, so shards are contiguous slices of the padded stream."""
+        per = self.nnz_padded // self.n_shards
+        starts = np.arange(self.n_shards) * per
+        return np.clip(self.nnz - starts, 0, per)
+
+    @property
+    def imbalance(self) -> float:
+        """Load imbalance across shards: ``1 - min/max`` of per-shard real
+        nnz (0.0 = perfectly even; approaches 1.0 when some shard is all
+        padding). Reported per call as ``TuckerResult.shard_imbalance``."""
+        counts = self.shard_counts
+        mx = int(counts.max())
+        if mx == 0:
+            return 0.0
+        return 1.0 - int(counts.min()) / mx
+
+
+def build_shard_schedule(
+    coo, mesh, nnz_axes: Tuple[str, ...], target_nnz: Optional[int] = None
+) -> ShardSchedule:
+    """Pad ``coo``'s nonzeros to a :func:`shard_pad_nnz` multiple of the nnz
+    mesh axes and ``device_put`` the two arrays once, sharded on their leading
+    (nnz) dimension. Validates the axis names up front — a missing axis must
+    be a clear error here, not an opaque ``KeyError`` deep in ``device_put``.
+
+    ``target_nnz`` raises the pad floor (e.g. to a serving bucket boundary,
+    so mixed-nnz requests share one compiled program); the schedule still
+    records the REAL stored nnz, keeping ``shard_counts``/``imbalance``
+    honest about where the actual nonzeros sit.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    nnz_axes = tuple(nnz_axes)
+    if not nnz_axes:
+        raise ValueError("nnz_axes must name at least one mesh axis")
+    missing = [a for a in nnz_axes if a not in mesh.axis_names]
+    if missing:
+        raise ValueError(
+            f"nnz axes {missing} are not mesh axes: the mesh has "
+            f"{tuple(mesh.axis_names)} — every nnz_axes name must be one "
+            f"of them"
+        )
+    n_shards = int(np.prod([mesh.shape[a] for a in nnz_axes]))
+    nnz = int(coo.indices.shape[0])
+    floor = max(nnz, int(target_nnz)) if target_nnz is not None else nnz
+    padded = coo.pad_to(shard_pad_nnz(floor, n_shards))
+    idx = jax.device_put(padded.indices, NamedSharding(mesh, P(nnz_axes, None)))
+    val = jax.device_put(padded.values, NamedSharding(mesh, P(nnz_axes)))
+    return ShardSchedule(
+        indices=idx,
+        values=val,
+        mesh=mesh,
+        nnz_axes=nnz_axes,
+        n_shards=n_shards,
+        nnz=nnz,
+        nnz_padded=int(idx.shape[0]),
+    )
+
+
 def bucket_nnz(nnz: int, base: int = 512, growth: float = 2.0) -> int:
     """Smallest bucket boundary >= ``nnz`` on the geometric grid
     ``base, ceil(base*growth), ceil(base*growth^2), ...``.

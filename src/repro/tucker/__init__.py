@@ -13,6 +13,11 @@ multi-backend):
 
     res = tucker.decompose(coo, (16, 16, 16))   # one-shot convenience
 
+    # data-parallel over a device mesh: one shard_map dispatch per decompose
+    sharded = tucker.TuckerSpec(shape=coo.shape, ranks=(16, 16, 16),
+                                shard=tucker.ShardSpec(num_devices=4))
+    res = tucker.plan(sharded)(coo)
+
 The legacy entrypoints (``repro.core.hooi.hooi_sparse`` / ``hooi_dense`` /
 ``tucker_complete_dense``) are deprecation shims over this package.
 """
@@ -23,18 +28,27 @@ from repro.tucker.planning import (
     clear_plan_cache,
     decompose,
     engine_for_spec,
+    mesh_fingerprint,
+    mesh_for_shard,
     plan,
     plan_cache_info,
     set_plan_cache_capacity,
 )
 from repro.tucker.result import RequestTiming, TuckerResult
-from repro.tucker.spec import ALGORITHMS, METHODS, TuckerSpec, spec_for
+from repro.tucker.spec import (
+    ALGORITHMS,
+    METHODS,
+    ShardSpec,
+    TuckerSpec,
+    spec_for,
+)
 
 __all__ = [
     "ALGORITHMS",
     "METHODS",
     "PlanCache",
     "RequestTiming",
+    "ShardSpec",
     "TuckerPlan",
     "TuckerResult",
     "TuckerSpec",
@@ -42,6 +56,8 @@ __all__ = [
     "clear_plan_cache",
     "decompose",
     "engine_for_spec",
+    "mesh_fingerprint",
+    "mesh_for_shard",
     "plan",
     "plan_cache_info",
     "set_plan_cache_capacity",

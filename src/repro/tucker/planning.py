@@ -42,10 +42,44 @@ __all__ = [
     "clear_plan_cache",
     "decompose",
     "engine_for_spec",
+    "mesh_fingerprint",
+    "mesh_for_shard",
     "plan",
     "plan_cache_info",
     "set_plan_cache_capacity",
 ]
+
+
+def mesh_for_shard(shard) -> "jax.sharding.Mesh":
+    """The 1-axis nnz mesh a :class:`~repro.tucker.spec.ShardSpec` executes
+    on: ``shard.num_devices`` devices named ``shard.axis``. Deterministic
+    (same spec on the same host -> the same mesh), so the plan cache can key
+    on its fingerprint. On a 1-device host, force more CPU devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the first
+    jax import."""
+    from repro.utils.compat import make_mesh
+
+    n_avail = len(jax.devices())
+    if shard.num_devices > n_avail:
+        raise ValueError(
+            f"ShardSpec wants {shard.num_devices} devices but only {n_avail} "
+            f"are attached — on a CPU host, set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{shard.num_devices} before the first jax import"
+        )
+    return make_mesh((shard.num_devices,), (shard.axis,))
+
+
+def mesh_fingerprint(mesh) -> str:
+    """Stable identity of a mesh for the plan-cache key: platform + device
+    ids (in mesh order) + axis layout. Two plans over identical meshes share
+    one compiled program; a changed device set or axis layout is a new key,
+    never a silent reuse of the wrong mesh's executable."""
+    devices = list(np.asarray(mesh.devices).flat)
+    plat = devices[0].platform if devices else "none"
+    ids = ",".join(str(d.id) for d in devices)
+    axes = "x".join(f"{a}={s}" for a, s in zip(mesh.axis_names, mesh.devices.shape))
+    return f"{plat}:{ids}/{axes}"
 
 
 def _total_traces() -> int:
@@ -169,12 +203,44 @@ class TuckerPlan:
         spec: TuckerSpec,
         engine: Optional[SweepEngine] = None,
         _resolved: Optional[str] = None,
+        _mesh=None,
     ):
         self.spec = spec
+        if spec.shard is not None:
+            # the sharded pipeline is plain XLA inside shard_map: force the
+            # resolution (spec validation already rejected engine='pallas';
+            # 'auto' must not pick pallas on a TPU host either).
+            _resolved = "xla"
+        self.mesh = (
+            _mesh if _mesh is not None
+            else (mesh_for_shard(spec.shard) if spec.shard is not None else None)
+        )
+        if self.mesh is not None:
+            n_mesh = int(np.prod(list(self.mesh.devices.shape) or [1]))
+            if spec.shard is None or n_mesh != spec.shard.num_devices:
+                raise ValueError(
+                    f"plan mesh has {n_mesh} devices but the spec "
+                    f"{'has no shard' if spec.shard is None else f'wants {spec.shard.num_devices}'}"
+                )
+        # nonzeros shard over every axis of the plan's mesh (a caller-supplied
+        # mesh keeps its own axis names; the default 1-axis mesh uses
+        # shard.axis).
+        self._nnz_axes = (
+            tuple(self.mesh.axis_names) if self.mesh is not None else None
+        )
+        # the compiled shard_map program, built lazily on first sharded call.
+        # Owned by the plan (not a module registry) so a plan-cache eviction
+        # releases the compiled executable along with the schedules.
+        self._sharded_program = None
         if spec.algorithm == "sparse":
             self.engine: Optional[SweepEngine] = engine_for_spec(
                 spec, prebuilt=engine, resolved=_resolved
             )
+            if spec.shard is not None and self.engine.name != "xla":
+                raise ValueError(
+                    f"a sharded plan requires the XLA engine, but the "
+                    f"prebuilt SweepEngine is {self.engine.name!r}"
+                )
         else:
             if engine is not None:
                 raise ValueError(
@@ -224,9 +290,17 @@ class TuckerPlan:
 
     # -- public execution surface -----------------------------------------
 
-    def __call__(self, x, key=None, factors_init=None) -> TuckerResult:
+    def __call__(self, x, key=None, factors_init=None,
+                 pad_nnz_to: Optional[int] = None) -> TuckerResult:
         """Run the planned decomposition on one tensor of the spec's shape.
-        Thread-safe: concurrent calls on one plan serialize."""
+        Thread-safe: concurrent calls on one plan serialize.
+
+        ``pad_nnz_to`` (sparse algorithm only) pads the stored nonzeros with
+        explicit zeros up to a target before execution, so mixed-nnz calls
+        share one nnz-shape-keyed compiled program (the serving plane passes
+        its bucket boundary). Sharded plans fold it into the shard padding
+        while keeping the imbalance counters on the REAL nonzeros.
+        """
         with self._exec_lock:
             self.stats.calls += 1
             if self.spec.algorithm == "dense":
@@ -234,7 +308,7 @@ class TuckerPlan:
             coo = self._check_sparse_input(x)
             if self.spec.algorithm == "complete":
                 return self._run_complete(coo, key, factors_init)
-            return self._run_sparse(coo, key, factors_init)
+            return self._run_sparse(coo, key, factors_init, pad_nnz_to)
 
     def batch(
         self,
@@ -252,7 +326,11 @@ class TuckerPlan:
         calls — same results, k dispatches — for configurations whose
         per-tensor schedules cannot share one program (the Pallas engine,
         Kron-reuse dedup plans, the legacy python pipeline); ``pad_nnz_to``
-        is irrelevant there (no shared program to stabilize) and ignored.
+        is irrelevant there (no shared program to stabilize) and ignored —
+        EXCEPT on sharded plans, whose per-member shard_map program is also
+        shape-keyed on the padded nnz: there each member is padded to
+        ``pad_nnz_to`` first, so mixed-nnz flushes of one bucket reuse one
+        compiled program instead of recompiling per distinct nnz.
 
         An empty ``coos`` is a defined no-op (``[]``); a member tensor with
         zero stored nonzeros is rejected with a clear error — its relative
@@ -285,7 +363,13 @@ class TuckerPlan:
             )
         with self._exec_lock:  # reentrant: the fallback loop re-enters __call__
             if not self.batch_is_vmappable(keys):
-                return [self(c, key=k) for c, k in zip(coos, keys)]
+                # stabilize the shard_map program's nnz shape across the
+                # flush: explicit-zero padding changes no contraction, and
+                # passing the target (instead of pre-padding the tensor)
+                # keeps the shard-imbalance counters on the real nonzeros
+                pad = pad_nnz_to if self.spec.shard is not None else None
+                return [self(c, key=k, pad_nnz_to=pad)
+                        for c, k in zip(coos, keys)]
             self.stats.calls += len(coos)  # same meaning as the fallback
             return self._run_sparse_vmapped(coos, keys, pad_nnz_to)
 
@@ -340,12 +424,58 @@ class TuckerPlan:
 
     # -- sparse (paper Alg. 2) ---------------------------------------------
 
-    def _run_sparse(self, coo: SparseCOO, key, factors_init) -> TuckerResult:
+    def _run_sparse(self, coo: SparseCOO, key, factors_init,
+                    pad_nnz_to: Optional[int] = None) -> TuckerResult:
         factors = self._init_factors(key, factors_init)
         xnorm2 = jnp.square(coo.norm())
+        if self.spec.shard is not None:
+            return self._run_sparse_sharded(coo, factors, xnorm2, pad_nnz_to)
+        if pad_nnz_to is not None and int(pad_nnz_to) > coo.nnz:
+            coo = coo.pad_to(int(pad_nnz_to))  # explicit zeros: shape-stable
         if self.spec.pipeline == "scan":
             return self._run_sparse_scan(coo, factors, xnorm2)
         return self._run_sparse_python(coo, factors, xnorm2)
+
+    def _run_sparse_sharded(self, coo, factors, xnorm2,
+                            pad_nnz_to: Optional[int] = None) -> TuckerResult:
+        """One shard_map-wrapped scan dispatch over the plan's mesh: nonzeros
+        sharded (device_put once, via the engine's ShardSchedule cache),
+        factors replicated, one psum per mode per sweep."""
+        from repro.core.distributed import psum_bytes_per_sweep
+
+        spec, eng = self.spec, self.engine
+        builds0 = eng.schedule_builds
+        sched = eng.shard_schedule(
+            coo, self.mesh, self._nnz_axes, pad_nnz_to=pad_nnz_to
+        )
+        if self._sharded_program is None:  # once per plan (under _exec_lock)
+            self._sharded_program = _hooi.build_sharded_program(
+                self.mesh, self._nnz_axes,
+                shape=spec.shape, ranks=spec.ranks, method=spec.method,
+                n_iter=spec.n_iter,
+            )
+        traces0 = _total_traces()
+        fs, core, hist_dev = self._sharded_program(
+            sched.indices, sched.values, tuple(factors), xnorm2,
+            jnp.float32(spec.tol),
+        )
+        _hooi.SWEEP_DISPATCH_COUNTS[("sharded", "scan")] += 1
+        hist = np.asarray(_hooi._fetch_history(hist_dev))  # the one d2h transfer
+        n_done = int(np.sum(hist != _hooi._SKIPPED))
+        res = self._result(
+            core, list(fs), hist[:n_done],
+            engine=eng.name,
+            dispatches=1,
+            retraces=_total_traces() - traces0,
+            schedule_builds=eng.schedule_builds - builds0,
+        )
+        res.collective_bytes_per_sweep = psum_bytes_per_sweep(
+            spec.shape, spec.ranks,
+            # the psum payload runs at the program's working precision
+            dtype=jnp.promote_types(coo.values.dtype, jnp.float32),
+        )
+        res.shard_imbalance = sched.imbalance
+        return res
 
     def _run_sparse_scan(self, coo, factors, xnorm2) -> TuckerResult:
         spec, eng = self.spec, self.engine
@@ -525,7 +655,10 @@ class TuckerPlan:
 # share one plan instead of racing a double construction of the same spec.
 # ---------------------------------------------------------------------------
 
-PlanCacheKey = Tuple[TuckerSpec, str]
+# (spec, resolved engine) — plus the mesh fingerprint for sharded specs, so
+# re-planning on an identical mesh is a cache hit while a changed device set
+# can never silently reuse the wrong mesh's compiled program.
+PlanCacheKey = Tuple
 EvictionHook = Callable[[PlanCacheKey, TuckerPlan], None]
 
 
@@ -653,7 +786,8 @@ class PlanCache:
 _PLAN_CACHE = PlanCache()
 
 
-def plan(spec: TuckerSpec, *, engine: Optional[SweepEngine] = None) -> TuckerPlan:
+def plan(spec: TuckerSpec, *, engine: Optional[SweepEngine] = None,
+         mesh=None) -> TuckerPlan:
     """Build (or fetch the cached) :class:`TuckerPlan` for ``spec``.
 
     Plans are cached per (spec, resolved engine), so every caller asking for
@@ -664,11 +798,29 @@ def plan(spec: TuckerSpec, *, engine: Optional[SweepEngine] = None) -> TuckerPla
     ``engine`` bypasses the cache and wraps that engine directly (its cached
     device schedules are reused across calls, like handing ``hooi_sparse`` a
     ``SweepEngine`` did).
+
+    ``mesh`` (sharded specs only) pins execution to an explicit device mesh
+    — its total device count must equal ``spec.shard.num_devices``, and the
+    nonzeros shard over ALL its axes. Default: a fresh 1-axis mesh over the
+    first ``num_devices`` attached devices (:func:`mesh_for_shard`). Either
+    way the plan cache keys on the mesh fingerprint, so an identical mesh is
+    a cache hit and a changed device set never reuses the wrong executable.
     """
     if engine is not None:
-        return TuckerPlan(spec, engine=engine)
+        return TuckerPlan(spec, engine=engine, _mesh=mesh)
+    if mesh is not None and spec.shard is None:
+        raise ValueError("mesh= only applies to specs with a ShardSpec")
     if spec.algorithm != "sparse":
         key = (spec, "xla")
+    elif spec.shard is not None:
+        # the key carries the mesh fingerprint: identical mesh -> cache hit
+        # (one compiled shard_map program per mesh), changed device set ->
+        # a fresh plan, never the wrong mesh's executable.
+        mesh = mesh if mesh is not None else mesh_for_shard(spec.shard)
+        key = (spec, "xla", mesh_fingerprint(mesh))
+        return _PLAN_CACHE.get_or_create(
+            key, lambda: TuckerPlan(spec, _resolved="xla", _mesh=mesh)
+        )
     else:
         # resolve on every lookup: 'auto'/'pallas' may map differently (and
         # warn) as backend availability changes — exactly like the legacy

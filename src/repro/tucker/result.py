@@ -74,6 +74,13 @@ class TuckerResult(HooiResult):
         triggered (0 when the engine's per-tensor caches were warm).
       timing: per-request queue/batch/execute wall-clock when the result was
         produced by ``repro.serve.TuckerService`` (``None`` otherwise).
+      collective_bytes_per_sweep: psum payload of one ALS sweep on the
+        sharded pipeline (``core.distributed.psum_bytes_per_sweep`` — N
+        psums of I_n x prod R_t f32, independent of nnz). ``None`` on
+        single-device runs.
+      shard_imbalance: load imbalance of the nnz sharding this run executed
+        with (``1 - min/max`` of per-shard real nonzeros; 0.0 = perfectly
+        even). ``None`` on single-device runs.
     """
 
     spec: Optional["TuckerSpec"] = None
@@ -82,6 +89,8 @@ class TuckerResult(HooiResult):
     retraces: int = 0
     schedule_builds: int = 0
     timing: Optional[RequestTiming] = None
+    collective_bytes_per_sweep: Optional[int] = None
+    shard_imbalance: Optional[float] = None
 
     @property
     def n_sweeps(self) -> int:

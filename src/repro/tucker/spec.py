@@ -11,7 +11,7 @@ retraces.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -20,6 +20,49 @@ from repro.core.hooi import PIPELINES, effective_ranks
 
 METHODS = ("svd", "householder", "gram")
 ALGORITHMS = ("sparse", "dense", "complete")
+FACTOR_POLICIES = ("replicated",)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Frozen description of the sharded-execution axis of a problem.
+
+    The paper's hybrid split (nnz-scaling Kron/TTM work on the accelerator,
+    small replicated QRP on the CPU) becomes a data-parallel mesh layout:
+    COO nonzeros are sharded along ``axis`` across ``num_devices`` devices
+    (padded to an even :func:`repro.sparse.layout.shard_pad_nnz` multiple),
+    factor matrices follow ``factor_policy``, and one ``psum`` per mode per
+    sweep completes each partial Kron-accumulation. Hashable so it can ride
+    inside :class:`TuckerSpec` and key the plan cache.
+
+    Attributes:
+      num_devices: shards along the nnz axis (the mesh size). Must not
+        exceed the attached device count — on a 1-CPU host, force more with
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
+        first jax import.
+      axis: the mesh axis name the nonzeros shard over.
+      factor_policy: how factors are laid out across the mesh. Only
+        'replicated' exists today (they are small: I_n x R_n, and the QRP
+        update is deterministic, so no broadcast is ever needed).
+    """
+
+    num_devices: int
+    axis: str = "nnz"
+    factor_policy: str = "replicated"
+
+    def __post_init__(self):
+        if int(self.num_devices) < 1:
+            raise ValueError(
+                f"num_devices must be >= 1, got {self.num_devices}"
+            )
+        if not self.axis or not isinstance(self.axis, str):
+            raise ValueError(f"axis must be a non-empty string, got {self.axis!r}")
+        if self.factor_policy not in FACTOR_POLICIES:
+            raise ValueError(
+                f"factor_policy must be one of {FACTOR_POLICIES}, got "
+                f"{self.factor_policy!r}"
+            )
+        object.__setattr__(self, "num_devices", int(self.num_devices))
 
 
 def _canonical_dtype(dtype) -> str:
@@ -57,6 +100,12 @@ class TuckerSpec:
       algorithm: 'sparse' (paper Alg. 2, COO input), 'dense' (Alg. 1,
         dense input) or 'complete' (EM-style completion, COO input).
       n_rounds: EM rounds for algorithm='complete' (ignored otherwise).
+      shard: a :class:`ShardSpec` to run the compiled sweep pipeline
+        data-parallel over a device mesh (nonzeros sharded, factors
+        replicated, one psum per mode per sweep), or ``None`` for
+        single-device execution. Requires the sparse algorithm on the scan
+        pipeline with the plain XLA engine (no Kron-reuse — its dedup plan
+        is a per-tensor host artifact that cannot shard).
     """
 
     shape: Tuple[int, ...]
@@ -70,6 +119,7 @@ class TuckerSpec:
     use_kron_reuse: bool = False
     algorithm: str = "sparse"
     n_rounds: int = 10
+    shard: Optional[ShardSpec] = None
 
     def __post_init__(self):
         shape = tuple(int(s) for s in self.shape)
@@ -101,6 +151,33 @@ class TuckerSpec:
             raise ValueError(f"n_rounds must be >= 1, got {self.n_rounds}")
         if not (float(self.tol) >= 0.0):  # also rejects NaN
             raise ValueError(f"tol must be >= 0, got {self.tol}")
+        if self.shard is not None:
+            if not isinstance(self.shard, ShardSpec):
+                raise TypeError(
+                    f"shard must be a ShardSpec or None, got "
+                    f"{type(self.shard).__name__}"
+                )
+            if self.algorithm != "sparse":
+                raise ValueError(
+                    f"shard requires algorithm='sparse' (only COO nonzeros "
+                    f"have an nnz axis to shard), got {self.algorithm!r}"
+                )
+            if self.pipeline != "scan":
+                raise ValueError(
+                    "shard requires pipeline='scan': the sharded path IS the "
+                    "compiled scan-over-sweeps program wrapped in shard_map"
+                )
+            if self.engine == "pallas":
+                raise ValueError(
+                    "shard requires the XLA engine: the Pallas kernels do "
+                    "not run inside shard_map (use engine='xla' or 'auto')"
+                )
+            if self.use_kron_reuse:
+                raise ValueError(
+                    "shard is incompatible with use_kron_reuse: the dedup "
+                    "plan is a per-tensor host artifact that cannot shard "
+                    "along the nnz axis"
+                )
         object.__setattr__(self, "shape", shape)
         object.__setattr__(self, "ranks", ranks)
         object.__setattr__(self, "n_iter", int(self.n_iter))
@@ -119,12 +196,15 @@ class TuckerSpec:
         contract ``repro.serve.TuckerService`` schedules around): the compiled
         scan pipeline over sparse COO input, without the Kron-reuse dedup
         (whose per-tensor plan arrays have data-dependent sizes and cannot
-        share one batched program). The engine must additionally *resolve* to
-        'xla' — that happens at plan level, where resolution lives."""
+        share one batched program). Sharded specs are excluded too: their one
+        program already spans the mesh, so a batch runs them sequentially —
+        still one dispatch per member. The engine must additionally *resolve*
+        to 'xla' — that happens at plan level, where resolution lives."""
         return (
             self.algorithm == "sparse"
             and self.pipeline == "scan"
             and not self.use_kron_reuse
+            and self.shard is None
         )
 
     def resolved_dtype(self):

@@ -65,6 +65,19 @@ def _optimization_barrier_jvp(primals, tangents):
     return optimization_barrier(x), dx
 
 
+def has_shard_map() -> bool:
+    """Whether this jax install has *any* shard_map spelling. The sharded
+    sweep pipeline (``TuckerSpec.shard``) needs one; tests skip gracefully
+    when neither exists."""
+    if hasattr(jax, "shard_map"):
+        return True
+    try:
+        from jax.experimental.shard_map import shard_map as _  # noqa: F401
+    except Exception:  # pragma: no cover - depends on the installed jax
+        return False
+    return True
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     """``jax.shard_map`` (new API, ``check_vma=``) or
     ``jax.experimental.shard_map.shard_map`` (old API, ``check_rep=``)."""

@@ -109,10 +109,67 @@ def test_sparse_ttm_chain_matches_dense_oracle(coo, data, seed):
 
 
 # ---------------------------------------------------------------------------
+# Shard padding (the sharded pipeline's even-split layer).
+# ---------------------------------------------------------------------------
+
+from repro.sparse.layout import shard_pad_nnz  # noqa: E402
+
+
+@SETTINGS
+@given(nnz=st.integers(0, 10_000), n_shards=st.integers(1, 64))
+def test_shard_pad_nnz_is_minimal_multiple(nnz, n_shards):
+    """The padded nnz is the MINIMAL multiple of the shard count that holds
+    every nonzero (and is never zero: each shard owns at least one slot)."""
+    p = shard_pad_nnz(nnz, n_shards)
+    assert p % n_shards == 0 and p >= nnz and p >= n_shards
+    # minimality: one shard-width less would drop nonzeros (or hit zero)
+    assert p - n_shards < max(nnz, 1)
+    # idempotent: padding an already-even count is the identity
+    assert shard_pad_nnz(p, n_shards) == p
+
+
+@SETTINGS
+@given(coo=coo_tensors(), data=st.data(), n_shards=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_shard_padding_preserves_unfolding_product(coo, data, n_shards, seed):
+    """Explicit-zero padding to the shard multiple never changes any mode-n
+    unfolding product: the padded tensor's sparse TTM chain equals the
+    unpadded one's, for every mode."""
+    mode = data.draw(st.integers(0, coo.ndim - 1))
+    rng = np.random.default_rng(seed)
+    factors = [
+        jnp.asarray(rng.standard_normal((s, min(2, s))).astype(np.float32))
+        for s in coo.shape
+    ]
+    padded = coo.pad_to(shard_pad_nnz(coo.nnz, n_shards))
+    assert padded.nnz % n_shards == 0
+    got = np.asarray(sparse_ttm_chain(padded, factors, mode))
+    want = np.asarray(sparse_ttm_chain(coo, factors, mode))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # nnz bucketing + batch padding (the serving plane's shape-stability layer).
 # ---------------------------------------------------------------------------
 
 from repro.sparse.layout import bucket_nnz, pad_coo_batch  # noqa: E402
+
+
+@SETTINGS
+@given(nnz=st.integers(0, 5_000), n_shards=st.integers(1, 16),
+       base=st.integers(1, 256))
+def test_shard_pad_round_trips_with_bucket_nnz(nnz, n_shards, base):
+    """The serving bucket grid and the shard grid compose stably: sharding a
+    bucket boundary then re-applying either padding is a fixpoint, and the
+    composition never drops below either grid alone."""
+    b = bucket_nnz(nnz, base=base)
+    p = shard_pad_nnz(b, n_shards)
+    assert p >= b >= nnz
+    assert shard_pad_nnz(p, n_shards) == p  # fixpoint under re-sharding
+    assert bucket_nnz(p, base=base) >= p  # re-bucketing never shrinks it
+    # and when the shard count divides the bucket boundary, sharding is free
+    if b % n_shards == 0:
+        assert p == b
 
 
 @SETTINGS

@@ -385,6 +385,83 @@ def test_service_key_fallback_padding_metrics_honest():
     assert snap["padding_overhead"] == pytest.approx(1.0)
 
 
+def test_service_over_mesh_plans_sharded():
+    """ServiceConfig(shard=...) constructs the service over a mesh: every
+    submitted spec without its own shard plans sharded (one shard_map
+    dispatch per request) — and the no-amortization warning stays silent,
+    because sequential flushes are the sharded design, not a fallback."""
+    from repro.utils.compat import has_shard_map
+
+    if not has_shard_map():
+        pytest.skip("this jax install has no shard_map")
+    shard = tucker.ShardSpec(num_devices=1)  # a 1-device mesh is still the
+    coos = _coos(2, seed0=500)               # full shard_map program
+    cfg = ServiceConfig(max_batch=2, max_wait_ms=10_000.0, shard=shard)
+    with TuckerService(cfg) as svc:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            tickets = [svc.submit_coo(c, SPEC) for c in coos]
+        results = [t.result(timeout=120) for t in tickets]
+    assert not [w for w in caught if issubclass(w.category, RuntimeWarning)]
+    sharded_spec = tucker.TuckerSpec(
+        shape=SPEC.shape, ranks=SPEC.ranks, method=SPEC.method,
+        n_iter=SPEC.n_iter, shard=shard,
+    )
+    for c, r in zip(coos, results):
+        assert r.spec.shard == shard
+        assert r.dispatches == 1  # one mesh-spanning dispatch per request
+        assert r.collective_bytes_per_sweep is not None
+        assert r.shard_imbalance is not None
+        ref = tucker.plan(sharded_spec)(c)
+        np.testing.assert_array_equal(r.fit_history, ref.fit_history)
+
+
+def test_service_sharded_flushes_bucket_pad_no_retrace():
+    """Mixed-nnz sharded requests in one bucket must share ONE compiled
+    shard_map program: the flush pads members to the bucket (then the even
+    shard multiple), so only the first flush of a bucket traces."""
+    from repro.core import hooi
+    from repro.utils.compat import has_shard_map
+
+    if not has_shard_map():
+        pytest.skip("this jax install has no shard_map")
+    shard = tucker.ShardSpec(num_devices=1)
+    spec = tucker.TuckerSpec(shape=(13, 11, 9), ranks=(2, 2, 2),
+                             method="gram", n_iter=2)
+    # three distinct nnz in the same 512-base bucket
+    coos = [random_sparse_tensor(spec.shape, d, seed=600 + i)
+            for i, d in enumerate((0.05, 0.06, 0.07))]
+    assert len({c.nnz for c in coos}) == 3
+    cfg = ServiceConfig(max_batch=1, max_wait_ms=10_000.0, shard=shard)
+    with TuckerService(cfg) as svc:
+        t0 = svc.submit_coo(coos[0], spec)
+        svc.flush()
+        r0 = t0.result(timeout=120)
+        traces = sum(hooi.SWEEP_TRACE_COUNTS.values())
+        tickets = [svc.submit_coo(c, spec) for c in coos[1:]]
+        svc.flush()
+        results = [t.result(timeout=120) for t in tickets]
+    assert sum(hooi.SWEEP_TRACE_COUNTS.values()) == traces, (
+        "mixed-nnz sharded flushes recompiled the shard_map program"
+    )
+    for r, c in zip([r0] + results, coos):
+        assert r.timing.nnz_padded == bucket_nnz(c.nnz)  # num_devices=1
+        assert r.timing.nnz_padded >= c.nnz
+
+
+def test_service_sharded_capacity_error_raises_at_submit():
+    """A ShardSpec wanting more devices than attached must fail the submit
+    call synchronously, like every other spec-validation error — not
+    asynchronously as a flush failure on the scheduler thread."""
+    too_many = len(jax.devices()) + 1
+    cfg = ServiceConfig(shard=tucker.ShardSpec(num_devices=too_many))
+    coo = _coos(1, seed0=650)[0]
+    with TuckerService(cfg) as svc:
+        with pytest.raises(ValueError,
+                           match="xla_force_host_platform_device_count"):
+            svc.submit_coo(coo, SPEC)
+
+
 def test_service_close_rejects_new_and_drains_pending():
     coos = _coos(2, seed0=380)
     svc = TuckerService(ServiceConfig(max_batch=8, max_wait_ms=10_000.0))
