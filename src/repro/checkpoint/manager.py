@@ -43,7 +43,13 @@ class CheckpointManager:
     keep: int = 3
 
     def __post_init__(self):
-        Path(self.directory).mkdir(parents=True, exist_ok=True)
+        root = Path(self.directory)
+        root.mkdir(parents=True, exist_ok=True)
+        # a crashed save leaves step_X.tmp behind; nothing ever renames or
+        # GCs those, so sweep them here before they accumulate unbounded.
+        for stale in root.glob("step_*.tmp"):
+            if stale.is_dir():
+                shutil.rmtree(stale, ignore_errors=True)
 
     # -- write ------------------------------------------------------------
     def save(self, step: int, state: Any, extra: Optional[Dict] = None) -> str:
@@ -89,6 +95,17 @@ class CheckpointManager:
                     continue
         return sorted(out)
 
+    def read_manifest(self, step: Optional[int] = None) -> Dict:
+        """The manifest dict of ``step`` (default: latest) — tree structure,
+        leaf names/shapes/dtypes, and the saver's ``extra`` — without loading
+        any array data. Resume layers use this to reconstruct the ``like``
+        tree :meth:`restore` wants before any state exists in the process."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = Path(self.directory) / f"step_{step:08d}"
+        return json.loads((d / "manifest.json").read_text())
+
     def restore(
         self, like: Any, step: Optional[int] = None,
         shardings: Optional[Any] = None,
@@ -101,13 +118,16 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
         d = Path(self.directory) / f"step_{step:08d}"
         manifest = json.loads((d / "manifest.json").read_text())
-        data = np.load(d / "shard_00000.npz")
         by_name = {}
-        for l in manifest["leaves"]:
-            arr = data[l["key"]]
-            if l["dtype"] == "bfloat16":
-                arr = arr.view(ml_dtypes.bfloat16)
-            by_name[l["name"]] = arr
+        # context-managed: NpzFile holds the archive's file handle open until
+        # closed, and indexing materializes each array eagerly — so nothing
+        # below needs the handle after this block.
+        with np.load(d / "shard_00000.npz") as data:
+            for l in manifest["leaves"]:
+                arr = data[l["key"]]
+                if l["dtype"] == "bfloat16":
+                    arr = arr.view(ml_dtypes.bfloat16)
+                by_name[l["name"]] = arr
         named_like = _flatten_with_names(like)
         leaves = []
         shard_leaves = (

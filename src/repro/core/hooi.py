@@ -229,6 +229,8 @@ def _sweep_scan(
     method,
     n_iter,
     core_dtype,
+    carry_in=None,
+    total_sweeps=None,
 ):
     """The scan-over-sweeps skeleton shared by every compiled pipeline
     (single-device, vmapped batch, shard_map mesh): ``n_iter`` cond-masked
@@ -236,12 +238,23 @@ def _sweep_scan(
     one mode unfolding / core update executes. Keeping the skeleton single
     means the sharded program inherits tol semantics, dtype pinning and the
     skip sentinel by construction — parity is structural, not retested per
-    pipeline."""
+    pipeline.
+
+    The snapshot/resume layer runs the SAME skeleton in chunks: ``carry_in``
+    = ``(core, prev_err, done, n_done)`` restarts the scan mid-job (a resumed
+    segment picks up the convergence state bit-for-bit), and the dynamic
+    ``total_sweeps`` masks sweeps past the job's true budget so every segment
+    — including a short final one, at any resume offset — reuses ONE compiled
+    program. Both default to the fresh-start behavior.
+
+    Returns ``(factors, core, hist, (prev_err, done, n_done))``; callers that
+    never resume just drop the carry.
+    """
     n = len(factors)
     init_dtypes = tuple(f.dtype for f in factors)
 
     def run_sweep(carry):
-        fs, _, prev_err, done = carry
+        fs, _, prev_err, done, n_done = carry
         fs = list(fs)
         y_n = None
         for mode in range(n):
@@ -260,43 +273,46 @@ def _sweep_scan(
         # same rule as the legacy loop: stop once two consecutive sweeps agree
         # to within tol (never on the first sweep — prev_err starts at +inf).
         done = (tol > 0) & jnp.isfinite(prev_err) & (jnp.abs(prev_err - err) < tol)
-        return tuple(fs), core, err, done
+        return tuple(fs), core, err, done, n_done + jnp.int32(1)
 
     def body(carry, _):
-        already_done = carry[3]
+        fs, core, prev_err, done, n_done = carry
+        already_done = done
+        if total_sweeps is not None:
+            # segment mode: the job's sweep budget is dynamic, so a segment
+            # that crosses it masks the excess sweeps exactly like tol does.
+            already_done = already_done | (n_done >= total_sweeps)
+        carry = (fs, core, prev_err, already_done, n_done)
         carry = jax.lax.cond(already_done, lambda c: c, run_sweep, carry)
         # sweeps skipped by the early-exit emit the sentinel, not an error.
         emitted = jnp.where(already_done, jnp.float32(_SKIPPED), carry[2])
         return carry, emitted
 
-    carry0 = (
-        tuple(factors),
-        jnp.zeros(tuple(ranks), dtype=core_dtype),
-        jnp.float32(jnp.inf),
-        jnp.asarray(False),
+    if carry_in is None:
+        core0 = jnp.zeros(tuple(ranks), dtype=core_dtype)
+        prev0 = jnp.float32(jnp.inf)
+        done0 = jnp.asarray(False)
+        n_done0 = jnp.int32(0)
+    else:
+        core0, prev0, done0, n_done0 = carry_in
+        core0 = jnp.asarray(core0, dtype=core_dtype)
+        prev0 = jnp.asarray(prev0, dtype=jnp.float32)
+        done0 = jnp.asarray(done0, dtype=bool)
+        n_done0 = jnp.asarray(n_done0, dtype=jnp.int32)
+    carry0 = (tuple(factors), core0, prev0, done0, n_done0)
+    (fs, core, prev_err, done, n_done), hist = jax.lax.scan(
+        body, carry0, None, length=n_iter
     )
-    (fs, core, _, _), hist = jax.lax.scan(body, carry0, None, length=n_iter)
-    return fs, core, hist
+    return fs, core, hist, (prev_err, done, n_done)
 
 
-def _scan_sweeps_impl(
-    indices,
-    values,
-    factors,
-    xnorm2,
-    tol,
-    scheds,
-    *,
-    shape,
-    ranks,
-    method,
-    n_iter,
-    engine_name,
-    interpret,
-    use_reuse,
+def _engine_unfoldings(
+    indices, values, scheds, *, shape, engine_name, interpret, use_reuse
 ):
-    # trace-time only: cache hits never reach this line.
-    SWEEP_TRACE_COUNTS[(engine_name, shape, tuple(ranks), method, n_iter)] += 1
+    """The one place a compiled pipeline's per-mode unfolding / core update
+    come from — shared by the full-run scan program and the snapshot segment
+    program so engine routing (pallas kernels, Kron-reuse dedup, plain XLA)
+    cannot drift between them."""
 
     def mode_unfolding(fs, mode):
         if engine_name == "pallas":
@@ -319,13 +335,41 @@ def _scan_sweeps_impl(
             return ops.ttm(y_n.T, u_last.T, interpret=interpret).T
         return ttm_unfolded(y_n.T, u_last.T).T
 
-    return _sweep_scan(
+    return mode_unfolding, core_unfolding
+
+
+def _scan_sweeps_impl(
+    indices,
+    values,
+    factors,
+    xnorm2,
+    tol,
+    scheds,
+    *,
+    shape,
+    ranks,
+    method,
+    n_iter,
+    engine_name,
+    interpret,
+    use_reuse,
+):
+    # trace-time only: cache hits never reach this line.
+    SWEEP_TRACE_COUNTS[(engine_name, shape, tuple(ranks), method, n_iter)] += 1
+
+    mode_unfolding, core_unfolding = _engine_unfoldings(
+        indices, values, scheds,
+        shape=shape, engine_name=engine_name, interpret=interpret,
+        use_reuse=use_reuse,
+    )
+    fs, core, hist, _ = _sweep_scan(
         mode_unfolding, core_unfolding, factors, xnorm2, tol,
         ranks=ranks, method=method, n_iter=n_iter,
         # working precision of the core carry: float64 inputs keep float64
         # (parity with the per-sweep python driver); float32 stays as before.
         core_dtype=jnp.promote_types(values.dtype, jnp.float32),
     )
+    return fs, core, hist
 
 
 # the compiled per-tensor program (tests introspect its jit cache directly).
@@ -337,6 +381,63 @@ _scan_sweeps = partial(
     ),
     donate_argnames=("factors",),
 )(_scan_sweeps_impl)
+
+
+def _segment_scan_sweeps_impl(
+    indices,
+    values,
+    factors,
+    core,
+    xnorm2,
+    tol,
+    prev_err,
+    done,
+    n_done,
+    total_sweeps,
+    scheds,
+    *,
+    shape,
+    ranks,
+    method,
+    segment_len,
+    engine_name,
+    interpret,
+    use_reuse,
+):
+    """One snapshot segment: ``segment_len`` sweeps of the SAME skeleton as
+    ``_scan_sweeps``, continuing from an explicit carry. ``total_sweeps`` is
+    dynamic, so one compiled program serves every segment of a job — the
+    short final one and any resume offset included (the no-retrace contract
+    the snapshot layer keeps)."""
+    # trace-time only: cache hits never reach this line.
+    SWEEP_TRACE_COUNTS[
+        (engine_name, shape, tuple(ranks), method, "segment", segment_len)
+    ] += 1
+
+    mode_unfolding, core_unfolding = _engine_unfoldings(
+        indices, values, scheds,
+        shape=shape, engine_name=engine_name, interpret=interpret,
+        use_reuse=use_reuse,
+    )
+    return _sweep_scan(
+        mode_unfolding, core_unfolding, factors, xnorm2, tol,
+        ranks=ranks, method=method, n_iter=segment_len,
+        core_dtype=jnp.promote_types(values.dtype, jnp.float32),
+        carry_in=(core, prev_err, done, n_done),
+        total_sweeps=total_sweeps,
+    )
+
+
+# the compiled segment program of the snapshot/resume layer. Factors are NOT
+# donated: the host spills each segment's carry to a checkpoint right after
+# the dispatch, and must never race a donated buffer.
+_segment_scan_sweeps = partial(
+    jax.jit,
+    static_argnames=(
+        "shape", "ranks", "method", "segment_len", "engine_name", "interpret",
+        "use_reuse",
+    ),
+)(_segment_scan_sweeps_impl)
 
 
 @partial(jax.jit, static_argnames=("shape", "ranks", "method", "n_iter", "dtype"))
@@ -385,7 +486,8 @@ def _batched_scan_sweeps(
 # I_n x prod_{t != n} R_t f32 — independent of nnz.
 # ---------------------------------------------------------------------------
 
-def build_sharded_program(mesh, nnz_axes, *, shape, ranks, method, n_iter):
+def build_sharded_program(mesh, nnz_axes, *, shape, ranks, method, n_iter,
+                          resumable=False):
     """Build the one-dispatch sharded sweep program (uncached: each call
     returns a fresh jit-wrapped callable with its own compile cache, so the
     CALLER owns the program's lifetime — ``TuckerPlan`` holds exactly one
@@ -398,6 +500,14 @@ def build_sharded_program(mesh, nnz_axes, *, shape, ranks, method, n_iter):
     and factors/xnorm2/tol are replicated. The whole multi-sweep loop —
     cond-masked ``tol`` early exit included — is one XLA program; only the
     fit history crosses back to host.
+
+    ``resumable=True`` builds the snapshot-segment variant instead:
+    ``program(indices, values, factors, core, xnorm2, tol, prev_err, done,
+    n_done, total_sweeps)`` -> ``(factors, core, hist, (prev_err, done,
+    n_done))`` — ``n_iter`` sweeps continuing from an explicit replicated
+    carry, with the job's true budget dynamic so one compiled program serves
+    every segment at any resume offset. Factors are not donated there: the
+    host spills the carry to a checkpoint right after each dispatch.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -408,7 +518,7 @@ def build_sharded_program(mesh, nnz_axes, *, shape, ranks, method, n_iter):
     n = len(shape)
     n_shards = int(np.prod([mesh.shape[a] for a in nnz_axes]))
 
-    def sweep_body(indices, values, factors, xnorm2, tol):
+    def _unfoldings(indices, values):
         # per-device view: indices (nnz_padded / n_shards, N), values
         # (nnz_padded / n_shards,), factors replicated.
         def mode_unfolding(fs, mode):
@@ -420,22 +530,74 @@ def build_sharded_program(mesh, nnz_axes, *, shape, ranks, method, n_iter):
         def core_unfolding(y_n, u_last):
             return ttm_unfolded(y_n.T, u_last.T).T
 
-        return _sweep_scan(
+        return mode_unfolding, core_unfolding
+
+    factor_specs = tuple(P(None, None) for _ in range(n))
+    core_spec = P(*([None] * n))
+
+    if resumable:
+        def segment_body(indices, values, factors, core, xnorm2, tol,
+                         prev_err, done, n_done, total_sweeps):
+            mode_unfolding, core_unfolding = _unfoldings(indices, values)
+            return _sweep_scan(
+                mode_unfolding, core_unfolding, factors, xnorm2, tol,
+                ranks=ranks, method=method, n_iter=n_iter,
+                core_dtype=jnp.promote_types(values.dtype, jnp.float32),
+                carry_in=(core, prev_err, done, n_done),
+                total_sweeps=total_sweeps,
+            )
+
+        in_specs = (
+            P(nnz_axes, None),  # indices
+            P(nnz_axes),  # values
+            factor_specs,  # factors (replicated)
+            core_spec,  # core carry (replicated)
+            P(), P(),  # xnorm2, tol
+            P(), P(), P(), P(),  # prev_err, done, n_done, total_sweeps
+        )
+        out_specs = (
+            factor_specs,
+            core_spec,
+            P(None),  # fit history
+            (P(), P(), P()),  # carry out: prev_err, done, n_done
+        )
+        inner = shard_map(
+            segment_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+
+        def traced(indices, values, factors, core, xnorm2, tol,
+                   prev_err, done, n_done, total_sweeps):
+            # trace-time only (outside the shard_map body, which jax may
+            # trace more than once per build): cache hits never reach here.
+            SWEEP_TRACE_COUNTS[
+                ("sharded", shape, ranks, method, "segment", int(n_iter),
+                 n_shards)
+            ] += 1
+            return inner(indices, values, factors, core, xnorm2, tol,
+                         prev_err, done, n_done, total_sweeps)
+
+        return jax.jit(traced)
+
+    def sweep_body(indices, values, factors, xnorm2, tol):
+        mode_unfolding, core_unfolding = _unfoldings(indices, values)
+        fs, core, hist, _ = _sweep_scan(
             mode_unfolding, core_unfolding, factors, xnorm2, tol,
             ranks=ranks, method=method, n_iter=n_iter,
             core_dtype=jnp.promote_types(values.dtype, jnp.float32),
         )
+        return fs, core, hist
 
     in_specs = (
         P(nnz_axes, None),  # indices
         P(nnz_axes),  # values
-        tuple(P(None, None) for _ in range(n)),  # factors (replicated)
+        factor_specs,  # factors (replicated)
         P(),  # xnorm2
         P(),  # tol
     )
     out_specs = (
-        tuple(P(None, None) for _ in range(n)),  # factors
-        P(*([None] * n)),  # core
+        factor_specs,  # factors
+        core_spec,  # core
         P(None),  # fit history
     )
     inner = shard_map(

@@ -40,7 +40,13 @@ class StragglerDetector:
 
     def observe(self, step: int, dt: float) -> bool:
         h = sorted(self.history)
-        median = h[len(h) // 2] if h else dt
+        if h:
+            # true median: on even-length windows the upper-middle element
+            # biases the watermark high and under-flags stragglers.
+            mid = len(h) // 2
+            median = h[mid] if len(h) % 2 else 0.5 * (h[mid - 1] + h[mid])
+        else:
+            median = dt
         is_straggler = len(self.history) >= 5 and dt > self.cfg.straggler_factor * median
         self.history.append(dt)
         if is_straggler:
@@ -84,14 +90,24 @@ class FailureInjector:
 
 def run_with_retries(fn: Callable, cfg: FtConfig, on_retry: Optional[Callable] = None):
     """Execute fn() with bounded retries (transient-failure policy: XLA OOM
-    and network faults are fatal; injected/transient RuntimeErrors retry)."""
-    last = None
+    and network faults are fatal; injected/transient RuntimeErrors retry).
+
+    ``on_retry(attempt, exc)`` fires only when another attempt will actually
+    run. The terminal failure re-raises immediately — no backoff sleep delays
+    it — with each earlier attempt's exception chained as ``__context__`` so
+    no intermediate traceback is lost.
+    """
+    last: Optional[RuntimeError] = None
     for attempt in range(cfg.max_retries + 1):
         try:
             return fn()
         except RuntimeError as e:  # transient class
+            if last is not None and e.__context__ is None:
+                e.__context__ = last  # chain attempts: no traceback is lost
+            if attempt >= cfg.max_retries:
+                raise  # terminal: no pointless backoff before the caller sees it
             last = e
             if on_retry:
                 on_retry(attempt, e)
             time.sleep(cfg.retry_backoff_s * (2 ** attempt))
-    raise last
+    raise AssertionError("unreachable")  # pragma: no cover

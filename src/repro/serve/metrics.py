@@ -77,6 +77,7 @@ class ServiceMetrics:
         self.nnz_real_sum = 0
         self.nnz_padded_sum = 0
         self.plan_evictions = 0  # global plan-cache evictions observed
+        self.retries = 0  # transient flush failures retried in place
         self.queue = LatencyTracker(latency_window)
         self.execute = LatencyTracker(latency_window)
         self.total = LatencyTracker(latency_window)
@@ -120,6 +121,13 @@ class ServiceMetrics:
         with self._lock:
             self.plan_evictions += 1
 
+    def on_retry(self) -> None:
+        """A flush's dispatch failed transiently and is being retried in
+        place (``runtime.fault_tolerance.run_with_retries``); the batch is
+        not failed — only the terminal failure reaches ``on_failure``."""
+        with self._lock:
+            self.retries += 1
+
     # -- derived -----------------------------------------------------------
 
     # unlocked formula helpers: the one definition each, shared by the
@@ -160,6 +168,7 @@ class ServiceMetrics:
                 ),
                 "batch_size_max": self.batch_size_max,
                 "plan_evictions": self.plan_evictions,
+                "retries": self.retries,
                 "padding_overhead": self._padding_overhead(),
                 "queue": self.queue.summary(),
                 "execute": self.execute.summary(),

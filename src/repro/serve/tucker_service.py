@@ -113,6 +113,12 @@ class ServiceConfig:
         single-dispatch shard_map programs across the mesh (one dispatch per
         request — mesh parallelism replaces vmap amortization). A spec
         submitted with an explicit ``shard`` keeps it.
+      max_retries: transient flush failures (RuntimeError — the
+        ``runtime.fault_tolerance`` retry class) retried in place before the
+        whole batch fails. 0 (default) keeps the historical fail-fast
+        behavior; the terminal failure always reaches the tickets with no
+        trailing backoff sleep.
+      retry_backoff_ms: base of the exponential retry backoff.
     """
 
     max_batch: int = 8
@@ -122,6 +128,8 @@ class ServiceConfig:
     plan_cache_capacity: Optional[int] = None
     latency_window: int = 8192
     shard: Optional["ShardSpec"] = None
+    max_retries: int = 0
+    retry_backoff_ms: float = 50.0
 
 
 class TuckerTicket:
@@ -231,6 +239,12 @@ class TuckerService:
             raise ValueError(
                 f"TuckerService serves algorithm='sparse' specs, got "
                 f"{spec.algorithm!r} (dense inputs have no nnz axis to batch)"
+            )
+        if spec.snapshot is not None:
+            raise ValueError(
+                "TuckerService does not serve snapshot specs: batch members "
+                "would interleave step sequences in one checkpoint directory "
+                "— run snapshot jobs directly via tucker.plan(spec)(coo)"
             )
         if self.config.shard is not None and spec.shard is None:
             # the service's mesh: plans built here execute sharded; a spec
@@ -427,11 +441,30 @@ class TuckerService:
             pad_to = (
                 batch.key.bucket if (vmappable or shard is not None) else None
             )
-            results = plan.batch(
-                [it.coo for it in items],
-                keys=[it.key for it in items],
-                pad_nnz_to=pad_to,
-            )
+
+            def dispatch():
+                return plan.batch(
+                    [it.coo for it in items],
+                    keys=[it.key for it in items],
+                    pad_nnz_to=pad_to,
+                )
+
+            if self.config.max_retries > 0:
+                from repro.runtime.fault_tolerance import (
+                    FtConfig,
+                    run_with_retries,
+                )
+
+                results = run_with_retries(
+                    dispatch,
+                    FtConfig(
+                        max_retries=self.config.max_retries,
+                        retry_backoff_s=self.config.retry_backoff_ms / 1e3,
+                    ),
+                    on_retry=lambda attempt, exc: self.metrics.on_retry(),
+                )
+            else:
+                results = dispatch()
         except Exception as exc:  # fail the batch, keep the scheduler alive
             for it in items:
                 it.ticket._set_exception(exc)

@@ -18,6 +18,14 @@ multi-backend):
                                 shard=tucker.ShardSpec(num_devices=4))
     res = tucker.plan(sharded)(coo)
 
+    # fault-tolerant long-running fit: snapshot every 5 sweeps, resume after
+    # a crash — on the same devices or elastically on fewer
+    ft = tucker.TuckerSpec(shape=coo.shape, ranks=(16, 16, 16),
+                           snapshot=tucker.SnapshotSpec(
+                               every_n_sweeps=5, directory="ckpt/job"))
+    res = tucker.plan(ft)(coo)              # snapshots as it sweeps
+    res = tucker.resume(ft, coo)            # picks up from the latest one
+
 The legacy entrypoints (``repro.core.hooi.hooi_sparse`` / ``hooi_dense`` /
 ``tucker_complete_dense``) are deprecation shims over this package.
 """
@@ -32,13 +40,16 @@ from repro.tucker.planning import (
     mesh_for_shard,
     plan,
     plan_cache_info,
+    resume,
     set_plan_cache_capacity,
 )
 from repro.tucker.result import RequestTiming, TuckerResult
+from repro.tucker.snapshot import SnapshotState, load_snapshot
 from repro.tucker.spec import (
     ALGORITHMS,
     METHODS,
     ShardSpec,
+    SnapshotSpec,
     TuckerSpec,
     spec_for,
 )
@@ -49,6 +60,8 @@ __all__ = [
     "PlanCache",
     "RequestTiming",
     "ShardSpec",
+    "SnapshotSpec",
+    "SnapshotState",
     "TuckerPlan",
     "TuckerResult",
     "TuckerSpec",
@@ -56,10 +69,12 @@ __all__ = [
     "clear_plan_cache",
     "decompose",
     "engine_for_spec",
+    "load_snapshot",
     "mesh_fingerprint",
     "mesh_for_shard",
     "plan",
     "plan_cache_info",
+    "resume",
     "set_plan_cache_capacity",
     "spec_for",
 ]

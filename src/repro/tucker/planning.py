@@ -46,6 +46,7 @@ __all__ = [
     "mesh_for_shard",
     "plan",
     "plan_cache_info",
+    "resume",
     "set_plan_cache_capacity",
 ]
 
@@ -232,6 +233,9 @@ class TuckerPlan:
         # Owned by the plan (not a module registry) so a plan-cache eviction
         # releases the compiled executable along with the schedules.
         self._sharded_program = None
+        # its resumable sibling (snapshot specs): one segment program per
+        # plan, reused for every segment of every job at any resume offset.
+        self._sharded_segment_program = None
         if spec.algorithm == "sparse":
             self.engine: Optional[SweepEngine] = engine_for_spec(
                 spec, prebuilt=engine, resolved=_resolved
@@ -291,7 +295,8 @@ class TuckerPlan:
     # -- public execution surface -----------------------------------------
 
     def __call__(self, x, key=None, factors_init=None,
-                 pad_nnz_to: Optional[int] = None) -> TuckerResult:
+                 pad_nnz_to: Optional[int] = None,
+                 resume_from=None, injector=None) -> TuckerResult:
         """Run the planned decomposition on one tensor of the spec's shape.
         Thread-safe: concurrent calls on one plan serialize.
 
@@ -300,15 +305,31 @@ class TuckerPlan:
         share one nnz-shape-keyed compiled program (the serving plane passes
         its bucket boundary). Sharded plans fold it into the shard padding
         while keeping the imbalance counters on the REAL nonzeros.
+
+        ``resume_from`` (snapshot specs only) restarts the job from a saved
+        snapshot: a checkpoint directory, or an already-loaded
+        :class:`~repro.tucker.snapshot.SnapshotState` (as :func:`resume`
+        passes). ``key``/``factors_init`` are ignored on a resume — the
+        factors come from the snapshot. ``injector`` (tests) is a
+        :class:`~repro.runtime.fault_tolerance.FailureInjector` consulted at
+        every segment boundary, inside the retry wrapper.
         """
         with self._exec_lock:
             self.stats.calls += 1
+            if self.spec.algorithm != "sparse" and (
+                resume_from is not None or injector is not None
+            ):
+                raise ValueError(
+                    "resume_from/injector require algorithm='sparse' with "
+                    "snapshot=SnapshotSpec(...)"
+                )
             if self.spec.algorithm == "dense":
                 return self._run_dense(x, key, factors_init)
             coo = self._check_sparse_input(x)
             if self.spec.algorithm == "complete":
                 return self._run_complete(coo, key, factors_init)
-            return self._run_sparse(coo, key, factors_init, pad_nnz_to)
+            return self._run_sparse(coo, key, factors_init, pad_nnz_to,
+                                    resume_from, injector)
 
     def batch(
         self,
@@ -343,6 +364,12 @@ class TuckerPlan:
         if self.spec.algorithm != "sparse":
             raise ValueError(
                 f"batch() requires algorithm='sparse', got {self.spec.algorithm!r}"
+            )
+        if self.spec.snapshot is not None:
+            raise ValueError(
+                "batch() does not compose with snapshot=SnapshotSpec(...): "
+                "the members would interleave step sequences in one "
+                "checkpoint directory — run snapshot jobs as single calls"
             )
         coos = [self._check_sparse_input(c) for c in coos]
         if keys is None:
@@ -425,7 +452,17 @@ class TuckerPlan:
     # -- sparse (paper Alg. 2) ---------------------------------------------
 
     def _run_sparse(self, coo: SparseCOO, key, factors_init,
-                    pad_nnz_to: Optional[int] = None) -> TuckerResult:
+                    pad_nnz_to: Optional[int] = None,
+                    resume_from=None, injector=None) -> TuckerResult:
+        if self.spec.snapshot is not None:
+            return self._run_sparse_snapshot(
+                coo, key, factors_init, pad_nnz_to, resume_from, injector
+            )
+        if resume_from is not None or injector is not None:
+            raise ValueError(
+                "resume_from/injector require a spec with "
+                "snapshot=SnapshotSpec(...)"
+            )
         factors = self._init_factors(key, factors_init)
         xnorm2 = jnp.square(coo.norm())
         if self.spec.shard is not None:
@@ -435,6 +472,175 @@ class TuckerPlan:
         if self.spec.pipeline == "scan":
             return self._run_sparse_scan(coo, factors, xnorm2)
         return self._run_sparse_python(coo, factors, xnorm2)
+
+    def _run_sparse_snapshot(self, coo, key, factors_init, pad_nnz_to,
+                             resume_from, injector) -> TuckerResult:
+        """The fault-tolerant segment loop: the job's ``n_iter`` sweeps run
+        as segments of ``snapshot.every_n_sweeps`` through the SAME scan
+        skeleton as the uninterrupted pipelines (bit-identical per-sweep
+        math), spilling the carry — factors, core, convergence state — to an
+        atomic checkpoint after every segment. A dynamic ``total_sweeps``
+        masks sweeps past the budget, so ONE compiled segment program serves
+        every segment and every resume offset (the no-retrace contract).
+        Each segment dispatch runs under ``run_with_retries``; a step-0
+        snapshot before the first segment makes a kill at ANY boundary
+        resumable."""
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.core.distributed import psum_bytes_per_sweep
+        from repro.runtime.fault_tolerance import FtConfig, run_with_retries
+        from repro.tucker import snapshot as _snap
+
+        spec, eng, snap = self.spec, self.engine, self.spec.snapshot
+        state = None
+        if resume_from is not None:
+            state = (
+                resume_from if isinstance(resume_from, _snap.SnapshotState)
+                else _snap.load_snapshot(str(resume_from))
+            )
+            _snap.check_compatible(spec, state)
+
+        # the relative error always normalizes by the REAL tensor norm,
+        # computed before any explicit-zero padding (parity with _run_sparse).
+        xnorm2 = jnp.square(coo.norm())
+        core_dtype = jnp.promote_types(coo.values.dtype, jnp.float32)
+        mesh_fp = mesh_fingerprint(self.mesh) if self.mesh is not None else None
+        if state is not None:
+            factors = [jnp.asarray(f) for f in state.factors]
+            core = jnp.asarray(state.core, dtype=core_dtype)
+            prev_err = float(state.prev_err)
+            done = bool(state.done)
+            n_done = int(state.sweeps_done)
+            hist: List[float] = list(state.fit_history)
+            resumed_from = n_done
+        else:
+            factors = self._init_factors(key, factors_init)
+            core = jnp.zeros(tuple(spec.ranks), dtype=core_dtype)
+            prev_err, done, n_done = float("inf"), False, 0
+            hist = []
+            resumed_from = None
+
+        mgr = CheckpointManager(snap.directory, keep=snap.keep)
+        ft = FtConfig(max_retries=snap.max_retries,
+                      retry_backoff_s=snap.retry_backoff_s)
+        retries = 0
+
+        def on_retry(attempt, exc):
+            nonlocal retries
+            retries += 1
+
+        dispatches = 0
+        snapshots_written = 0
+        builds0 = eng.schedule_builds
+        traces0 = _total_traces()
+        segment_len = snap.every_n_sweeps
+        total_sweeps = jnp.int32(spec.n_iter)
+        tol = jnp.float32(spec.tol)
+
+        # device-side twins of the host carry scalars: each dispatch feeds
+        # the PREVIOUS dispatch's output arrays straight back in (no eager
+        # host->device conversions on the hot segment loop).
+        prev_err_d = jnp.float32(prev_err)
+        done_d = jnp.asarray(done)
+        n_done_d = jnp.int32(n_done)
+
+        if self.spec.shard is not None:
+            sched = eng.shard_schedule(
+                coo, self.mesh, self._nnz_axes, pad_nnz_to=pad_nnz_to
+            )
+            if self._sharded_segment_program is None:  # once per plan
+                self._sharded_segment_program = _hooi.build_sharded_program(
+                    self.mesh, self._nnz_axes,
+                    shape=spec.shape, ranks=spec.ranks, method=spec.method,
+                    n_iter=segment_len, resumable=True,
+                )
+
+            def dispatch():
+                out = self._sharded_segment_program(
+                    sched.indices, sched.values, tuple(factors), core,
+                    xnorm2, tol, prev_err_d, done_d, n_done_d, total_sweeps,
+                )
+                _hooi.SWEEP_DISPATCH_COUNTS[("sharded", "scan")] += 1
+                return out
+        else:
+            if pad_nnz_to is not None and int(pad_nnz_to) > coo.nnz:
+                coo = coo.pad_to(int(pad_nnz_to))
+            use_reuse = eng.use_kron_reuse and eng.name == "xla"
+            scheds = tuple(
+                eng.device_schedule(coo, m) for m in range(coo.ndim)
+            )
+            interpret = (
+                eng.resolved_interpret() if eng.name == "pallas" else False
+            )
+
+            def dispatch():
+                out = _hooi._segment_scan_sweeps(
+                    coo.indices, coo.values, tuple(factors), core,
+                    xnorm2, tol, prev_err_d, done_d, n_done_d, total_sweeps,
+                    scheds,
+                    shape=spec.shape, ranks=spec.ranks, method=spec.method,
+                    segment_len=segment_len, engine_name=eng.name,
+                    interpret=interpret, use_reuse=use_reuse,
+                )
+                _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
+                return out
+
+        def save(step):
+            nonlocal snapshots_written
+            _snap.save_snapshot(
+                mgr, spec, factors=factors, core=core, prev_err=prev_err,
+                done=done, sweeps_done=step, fit_history=hist,
+                mesh_fp=mesh_fp,
+            )
+            snapshots_written += 1
+
+        if state is None:
+            save(0)  # a kill at ANY later boundary finds a resumable job
+
+        while n_done < spec.n_iter and not done:
+
+            def step():
+                if injector is not None:
+                    # consulted inside the retry wrapper: a transient
+                    # injected failure retries in place (the injector is
+                    # one-shot); with max_retries=0 it propagates AFTER the
+                    # last snapshot, which is the kill the resume tests take.
+                    injector.maybe_fail(n_done)
+                return dispatch()
+
+            fs, core_d, hist_dev, carry = run_with_retries(
+                step, ft, on_retry=on_retry
+            )
+            dispatches += 1
+            factors, core = list(fs), core_d
+            prev_err_d, done_d, n_done_d = carry
+            seg_hist = np.asarray(_hooi._fetch_history(hist_dev))
+            hist.extend(float(h) for h in seg_hist[seg_hist != _hooi._SKIPPED])
+            # the one host sync per segment (the snapshot layer's overhead):
+            # the carry scalars decide loop exit and ride into the manifest.
+            prev_err, done, n_done = (
+                float(np.asarray(prev_err_d)),
+                bool(np.asarray(done_d)),
+                int(np.asarray(n_done_d)),
+            )
+            save(n_done)
+
+        res = self._result(
+            core, list(factors), np.asarray(hist, dtype=np.float32),
+            engine=eng.name,
+            dispatches=dispatches,
+            retraces=_total_traces() - traces0,
+            schedule_builds=eng.schedule_builds - builds0,
+        )
+        res.snapshots_written = snapshots_written
+        res.resumed_from_sweep = resumed_from
+        res.retries = retries
+        if self.spec.shard is not None:
+            res.collective_bytes_per_sweep = psum_bytes_per_sweep(
+                spec.shape, spec.ranks,
+                dtype=jnp.promote_types(coo.values.dtype, jnp.float32),
+            )
+            res.shard_imbalance = sched.imbalance
+        return res
 
     def _run_sparse_sharded(self, coo, factors, xnorm2,
                             pad_nnz_to: Optional[int] = None) -> TuckerResult:
@@ -849,6 +1055,55 @@ def add_plan_eviction_hook(hook: EvictionHook) -> Callable[[], None]:
     """Observe global plan-cache evictions; returns a deregistration
     callable. See :meth:`PlanCache.add_eviction_hook`."""
     return _PLAN_CACHE.add_eviction_hook(hook)
+
+
+def resume(spec: TuckerSpec, x, directory: Optional[str] = None, *,
+           key=None, mesh=None, injector=None) -> TuckerResult:
+    """Restart a snapshotted decomposition from its latest checkpoint.
+
+    Loads the newest snapshot in ``directory`` (default: the spec's own
+    ``snapshot.directory``), verifies it describes the same problem
+    (shape/ranks/method/algorithm), and runs the remaining sweeps through the
+    planned pipeline — continuing the convergence state bit-for-bit, so the
+    final factors/core match an uninterrupted run of the same spec.
+
+    Elastic: a sharded spec whose ``num_devices`` exceeds the devices now
+    attached is clamped (with a warning) instead of dying — the snapshot
+    carry is replicated, so only the plan re-shards: the mesh-fingerprint
+    plan cache builds a fresh plan for the new mesh and the ShardSchedule is
+    redistributed over it. A snapshot written by a 4-device job resumes on 2
+    (or 1) unchanged.
+
+    ``key`` is accepted for API symmetry but ignored — the factors come from
+    the snapshot, not a fresh init.
+    """
+    from repro.tucker import snapshot as _snap
+
+    if spec.snapshot is None:
+        raise ValueError(
+            "resume() requires a spec with snapshot=SnapshotSpec(...)"
+        )
+    directory = directory if directory is not None else spec.snapshot.directory
+    state = _snap.load_snapshot(directory)
+    _snap.check_compatible(spec, state)
+    if spec.shard is not None and mesh is None:
+        n_avail = len(jax.devices())
+        if spec.shard.num_devices > n_avail:
+            warnings.warn(
+                f"resuming a {spec.shard.num_devices}-device job on "
+                f"{n_avail} attached device(s): clamping "
+                f"ShardSpec.num_devices — the replicated snapshot carry "
+                f"restores unchanged and the nonzeros re-shard over the "
+                f"smaller mesh",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            spec = dataclasses.replace(
+                spec,
+                shard=dataclasses.replace(spec.shard, num_devices=n_avail),
+            )
+    p = plan(spec, mesh=mesh)
+    return p(x, key=key, resume_from=state, injector=injector)
 
 
 def decompose(x, ranks: Sequence[int], *, key=None, factors_init=None,

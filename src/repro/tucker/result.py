@@ -81,6 +81,13 @@ class TuckerResult(HooiResult):
       shard_imbalance: load imbalance of the nnz sharding this run executed
         with (``1 - min/max`` of per-shard real nonzeros; 0.0 = perfectly
         even). ``None`` on single-device runs.
+      snapshots_written: checkpoints this call wrote (snapshot specs only;
+        includes the step-0 snapshot a fresh job writes before its first
+        segment).
+      resumed_from_sweep: the sweep count the job restarted from when this
+        call resumed a snapshot; ``None`` on fresh runs.
+      retries: segment dispatches that failed transiently and were retried
+        by the ``run_with_retries`` wrapper this call ran under.
     """
 
     spec: Optional["TuckerSpec"] = None
@@ -91,6 +98,9 @@ class TuckerResult(HooiResult):
     timing: Optional[RequestTiming] = None
     collective_bytes_per_sweep: Optional[int] = None
     shard_imbalance: Optional[float] = None
+    snapshots_written: int = 0
+    resumed_from_sweep: Optional[int] = None
+    retries: int = 0
 
     @property
     def n_sweeps(self) -> int:

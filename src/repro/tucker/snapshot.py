@@ -1,0 +1,184 @@
+"""Snapshot/resume state of the compiled sweep pipelines.
+
+The snapshot layer's contract, shared by the single-device, Pallas, and
+shard_map pipelines (they all run the one ``_sweep_scan`` skeleton in
+segments): after every ``SnapshotSpec.every_n_sweeps`` sweeps the whole
+carry — factors, core, convergence state, fit history so far — spills to
+host once and is written atomically through
+:class:`repro.checkpoint.manager.CheckpointManager` (tmp-dir + rename, stale
+tmp GC, bounded retention). ``load_snapshot`` reverses it without needing
+any in-process state: the manifest records every leaf's shape/dtype, so the
+``like`` tree :meth:`CheckpointManager.restore` wants is reconstructed from
+the checkpoint itself.
+
+Elastic by construction: the carry is replicated (factors are small
+I_n x R_n matrices), so a snapshot written by a 4-device shard_map job
+restores unchanged onto 2 devices or 1 — the *plan* re-shards (mesh
+fingerprinted plan cache + a rebuilt ShardSchedule), the state never has to.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = [
+    "SNAPSHOT_FORMAT",
+    "SnapshotState",
+    "check_compatible",
+    "load_snapshot",
+    "save_snapshot",
+]
+
+SNAPSHOT_FORMAT = 1
+
+
+@dataclasses.dataclass
+class SnapshotState:
+    """One restored sweep-pipeline snapshot (host-side numpy state).
+
+    Attributes:
+      factors: the factor matrices U_n after ``sweeps_done`` sweeps.
+      core: the core tensor after ``sweeps_done`` sweeps (all-zero when the
+        snapshot predates the first completed sweep).
+      prev_err: relative error of the last completed sweep (+inf before the
+        first) — the ``tol`` early-exit compares against this on resume, so
+        convergence behavior is bit-for-bit the uninterrupted run's.
+      done: whether the ``tol`` early exit had already fired.
+      sweeps_done: completed ALS sweeps.
+      fit_history: per-sweep relative errors of the completed sweeps.
+      meta: the manifest ``extra`` dict (spec fingerprint, mesh fingerprint,
+        snapshot interval, format version).
+      step: the checkpoint step this state was loaded from.
+    """
+
+    factors: List[np.ndarray]
+    core: np.ndarray
+    prev_err: float
+    done: bool
+    sweeps_done: int
+    fit_history: List[float]
+    meta: Dict
+    step: int
+
+
+def _spec_meta(spec) -> Dict:
+    """The spec fields a resume must agree on (plus context worth keeping)."""
+    return {
+        "shape": list(spec.shape),
+        "ranks": list(spec.ranks),
+        "method": spec.method,
+        "algorithm": spec.algorithm,
+        "n_iter": int(spec.n_iter),
+        "tol": float(spec.tol),
+        "dtype": spec.dtype,
+        "every_n_sweeps": (
+            int(spec.snapshot.every_n_sweeps) if spec.snapshot else None
+        ),
+    }
+
+
+def save_snapshot(
+    mgr: CheckpointManager,
+    spec,
+    *,
+    factors,
+    core,
+    prev_err,
+    done,
+    sweeps_done: int,
+    fit_history,
+    mesh_fp: Optional[str] = None,
+) -> str:
+    """Write one snapshot at checkpoint step ``sweeps_done``. The array
+    carry goes through the manager's atomic sharded-npz path; the small
+    host-side context (sweep count, fit history, spec/mesh fingerprints)
+    rides in the manifest's ``extra``."""
+    state = {
+        "core": np.asarray(jax.device_get(core)),
+        "done": np.asarray(bool(done)),
+        "factors": [np.asarray(jax.device_get(f)) for f in factors],
+        "prev_err": np.asarray(jax.device_get(prev_err), dtype=np.float32),
+    }
+    extra = {
+        "format": SNAPSHOT_FORMAT,
+        "kind": "tucker-sweep",
+        "sweeps_done": int(sweeps_done),
+        "fit_history": [float(h) for h in fit_history],
+        "spec": _spec_meta(spec),
+        "mesh": mesh_fp,
+    }
+    return mgr.save(int(sweeps_done), state, extra=extra)
+
+
+def load_snapshot(directory: str, step: Optional[int] = None) -> SnapshotState:
+    """Load the latest (or a specific-step) snapshot from ``directory`` into
+    host numpy state, with no prior knowledge of shapes or dtypes — the
+    ``like`` tree is rebuilt from the manifest itself."""
+    mgr = CheckpointManager(directory)
+    manifest = mgr.read_manifest(step)
+    extra = manifest.get("extra", {})
+    if extra.get("kind") != "tucker-sweep":
+        raise ValueError(
+            f"checkpoint step {manifest['step']} in {directory} is not a "
+            f"tucker sweep snapshot (kind={extra.get('kind')!r})"
+        )
+    by_name = {l["name"]: l for l in manifest["leaves"]}
+
+    def sds(name):
+        leaf = by_name[name]
+        return jax.ShapeDtypeStruct(
+            tuple(leaf["shape"]), jnp.dtype(leaf["dtype"])
+        )
+
+    n_factors = sum(1 for n in by_name if n.startswith("factors/"))
+    like = {
+        "core": sds("core"),
+        "done": sds("done"),
+        "factors": [sds(f"factors/{i}") for i in range(n_factors)],
+        "prev_err": sds("prev_err"),
+    }
+    restored, step, extra = mgr.restore(like, step=manifest["step"])
+    return SnapshotState(
+        factors=[np.asarray(f) for f in restored["factors"]],
+        core=np.asarray(restored["core"]),
+        prev_err=float(np.asarray(restored["prev_err"])),
+        done=bool(np.asarray(restored["done"])),
+        sweeps_done=int(extra["sweeps_done"]),
+        fit_history=[float(h) for h in extra.get("fit_history", [])],
+        meta=extra,
+        step=step,
+    )
+
+
+def check_compatible(spec, state: SnapshotState) -> None:
+    """A resume must describe the same *problem* the snapshot came from:
+    shape/ranks/method/algorithm are structural (the carry's shapes and the
+    per-sweep math depend on them). Everything else may legitimately change
+    across a resume — n_iter (extend the budget), tol (dynamic anyway),
+    shard (elastic reshard), engine (the math is engine-invariant)."""
+    want = state.meta.get("spec", {})
+    for field in ("shape", "ranks"):
+        have = list(getattr(spec, field))
+        if want.get(field) is not None and list(want[field]) != have:
+            raise ValueError(
+                f"cannot resume: snapshot was written for {field}="
+                f"{tuple(want[field])}, the spec has {tuple(have)}"
+            )
+    for field in ("method", "algorithm"):
+        have = getattr(spec, field)
+        if want.get(field) is not None and want[field] != have:
+            raise ValueError(
+                f"cannot resume: snapshot was written for {field}="
+                f"{want[field]!r}, the spec has {have!r}"
+            )
+    if int(state.sweeps_done) > int(spec.n_iter) and not state.done:
+        raise ValueError(
+            f"cannot resume: snapshot already has {state.sweeps_done} sweeps "
+            f"but the spec budgets n_iter={spec.n_iter}"
+        )

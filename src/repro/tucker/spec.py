@@ -65,6 +65,66 @@ class ShardSpec:
         object.__setattr__(self, "num_devices", int(self.num_devices))
 
 
+@dataclasses.dataclass(frozen=True)
+class SnapshotSpec:
+    """Frozen description of the fault-tolerance axis of a problem: snapshot
+    the sweep carry every ``every_n_sweeps`` ALS sweeps so a preempted job
+    resumes from its latest manifest instead of refitting from scratch.
+
+    The compiled pipeline runs in chunked scan *segments* of
+    ``every_n_sweeps`` sweeps; after each segment the factor/core/convergence
+    carry spills to host once and is written atomically through
+    :class:`repro.checkpoint.manager.CheckpointManager`. One compiled segment
+    program serves the whole job — the short final segment and any resume
+    offset included — so snapshotting keeps the no-retrace contract.
+    Hashable so it can ride inside :class:`TuckerSpec`; two specs differing
+    only in ``directory`` share the same jit cache (the program is keyed on
+    shapes and statics, not paths).
+
+    Attributes:
+      every_n_sweeps: sweeps per segment (the snapshot interval).
+      directory: checkpoint root, one job per directory — concurrent jobs
+        snapshotting into one directory would interleave step sequences.
+      keep: snapshots retained (older ones are GC'd), per CheckpointManager.
+      max_retries: transient-failure retries per segment dispatch
+        (``runtime.fault_tolerance.run_with_retries``); 0 = fail fast and
+        rely on resume.
+      retry_backoff_s: base of the exponential retry backoff.
+    """
+
+    every_n_sweeps: int
+    directory: str
+    keep: int = 3
+    max_retries: int = 0
+    retry_backoff_s: float = 0.05
+
+    def __post_init__(self):
+        if int(self.every_n_sweeps) < 1:
+            raise ValueError(
+                f"every_n_sweeps must be >= 1, got {self.every_n_sweeps}"
+            )
+        if not self.directory or not isinstance(self.directory, str):
+            raise ValueError(
+                f"directory must be a non-empty string, got {self.directory!r}"
+            )
+        if int(self.keep) < 1:
+            raise ValueError(f"keep must be >= 1, got {self.keep}")
+        if int(self.max_retries) < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}"
+            )
+        if not (float(self.retry_backoff_s) >= 0.0):  # also rejects NaN
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {self.retry_backoff_s}"
+            )
+        object.__setattr__(self, "every_n_sweeps", int(self.every_n_sweeps))
+        object.__setattr__(self, "keep", int(self.keep))
+        object.__setattr__(self, "max_retries", int(self.max_retries))
+        object.__setattr__(
+            self, "retry_backoff_s", float(self.retry_backoff_s)
+        )
+
+
 def _canonical_dtype(dtype) -> str:
     """Normalize a dtype spec to a canonical string ("auto" = follow the
     jax x64 flag at execution time, the legacy drivers' behavior)."""
@@ -106,6 +166,12 @@ class TuckerSpec:
         single-device execution. Requires the sparse algorithm on the scan
         pipeline with the plain XLA engine (no Kron-reuse — its dedup plan
         is a per-tensor host artifact that cannot shard).
+      snapshot: a :class:`SnapshotSpec` to run the compiled sweep pipeline
+        in chunked segments with the carry checkpointed at each interval
+        (resumable via ``tucker.resume``), or ``None`` for the one-dispatch
+        fire-and-forget run. Requires the sparse algorithm on the scan
+        pipeline; composes with ``shard`` (elastic resume onto a different
+        device count) and with every engine.
     """
 
     shape: Tuple[int, ...]
@@ -120,6 +186,7 @@ class TuckerSpec:
     algorithm: str = "sparse"
     n_rounds: int = 10
     shard: Optional[ShardSpec] = None
+    snapshot: Optional[SnapshotSpec] = None
 
     def __post_init__(self):
         shape = tuple(int(s) for s in self.shape)
@@ -178,6 +245,23 @@ class TuckerSpec:
                     "plan is a per-tensor host artifact that cannot shard "
                     "along the nnz axis"
                 )
+        if self.snapshot is not None:
+            if not isinstance(self.snapshot, SnapshotSpec):
+                raise TypeError(
+                    f"snapshot must be a SnapshotSpec or None, got "
+                    f"{type(self.snapshot).__name__}"
+                )
+            if self.algorithm != "sparse":
+                raise ValueError(
+                    f"snapshot requires algorithm='sparse' (only the "
+                    f"compiled sweep pipeline has a resumable carry), got "
+                    f"{self.algorithm!r}"
+                )
+            if self.pipeline != "scan":
+                raise ValueError(
+                    "snapshot requires pipeline='scan': the snapshot layer "
+                    "IS the compiled scan program run in resumable segments"
+                )
         object.__setattr__(self, "shape", shape)
         object.__setattr__(self, "ranks", ranks)
         object.__setattr__(self, "n_iter", int(self.n_iter))
@@ -198,13 +282,16 @@ class TuckerSpec:
         (whose per-tensor plan arrays have data-dependent sizes and cannot
         share one batched program). Sharded specs are excluded too: their one
         program already spans the mesh, so a batch runs them sequentially —
-        still one dispatch per member. The engine must additionally *resolve*
+        still one dispatch per member. Snapshot specs are excluded as well:
+        a snapshot job is one long-running fit bound to its own checkpoint
+        directory, not a batch member. The engine must additionally *resolve*
         to 'xla' — that happens at plan level, where resolution lives."""
         return (
             self.algorithm == "sparse"
             and self.pipeline == "scan"
             and not self.use_kron_reuse
             and self.shard is None
+            and self.snapshot is None
         )
 
     def resolved_dtype(self):

@@ -51,6 +51,71 @@ def test_run_with_retries_exhausts():
         run_with_retries(fn, FtConfig(max_retries=2, retry_backoff_s=0.0))
 
 
+def test_run_with_retries_no_backoff_after_terminal_failure(monkeypatch):
+    """Regression: the terminal failure used to sleep the FULL (largest)
+    backoff before re-raising — pure added latency nobody could observe a
+    retry from. Sleeps are legal BETWEEN attempts only."""
+    import repro.runtime.fault_tolerance as ft_mod
+
+    sleeps = []
+    monkeypatch.setattr(ft_mod.time, "sleep", lambda s: sleeps.append(s))
+
+    def fn():
+        raise RuntimeError("persistent")
+
+    with pytest.raises(RuntimeError):
+        run_with_retries(fn, FtConfig(max_retries=2, retry_backoff_s=1.0))
+    assert sleeps == [1.0, 2.0]  # 3 attempts, 2 inter-attempt backoffs
+
+    sleeps.clear()
+    with pytest.raises(RuntimeError):
+        run_with_retries(fn, FtConfig(max_retries=0, retry_backoff_s=300.0))
+    assert sleeps == []  # single attempt: no backoff at all
+
+
+def test_run_with_retries_chains_attempts():
+    """The terminal exception carries the previous attempt via __context__
+    (no attempt's traceback is lost)."""
+    n = [0]
+
+    def fn():
+        n[0] += 1
+        raise RuntimeError(f"attempt {n[0]}")
+
+    with pytest.raises(RuntimeError) as ei:
+        run_with_retries(fn, FtConfig(max_retries=1, retry_backoff_s=0.0))
+    assert str(ei.value) == "attempt 2"
+    assert isinstance(ei.value.__context__, RuntimeError)
+    assert str(ei.value.__context__) == "attempt 1"
+
+
+def test_run_with_retries_on_retry_only_before_actual_retry():
+    """on_retry fires once per retry that RUNS, never for the terminal
+    failure."""
+    seen = []
+
+    def fn():
+        raise RuntimeError("persistent")
+
+    with pytest.raises(RuntimeError):
+        run_with_retries(
+            fn, FtConfig(max_retries=2, retry_backoff_s=0.0),
+            on_retry=lambda attempt, exc: seen.append(attempt),
+        )
+    assert seen == [0, 1]  # 3 attempts, 2 retries, no terminal callback
+
+
+def test_straggler_median_is_true_median_on_even_window():
+    """Regression: ``h[len(h)//2]`` is the UPPER middle element on
+    even-length windows, biasing the watermark high and under-flagging.
+    History [1,1,1,3,3,3] has true median 2.0; the biased code used 3.0,
+    so dt=5 with factor 2.0 (threshold 4.0 vs biased 6.0) was missed."""
+    det = StragglerDetector(FtConfig(straggler_factor=2.0, straggler_window=20))
+    det.history.extend([1.0, 1.0, 1.0, 3.0, 3.0, 3.0])
+    assert det.observe(6, 5.0)  # 5 > 2.0 * 2.0 (biased: 5 < 2.0 * 3.0)
+    assert det.flags == [6]
+
+
 def _trainer(tmp_path, mesh, total, injector=None, ckpt_every=4):
     from repro.train.trainer import Trainer, TrainerConfig
 
