@@ -19,14 +19,28 @@ and records the perf trajectory every future PR is measured against:
        "dispatches_per_call": {"python": n_iter, "scan": 1},
        "retraces_during_timing",     # MUST be 0 (jit cache hit every call)
        "fit_maxdiff",                # |python fit history - scan fit history|
-    }, ...]
+       "hbm_bytes_per_sweep",        # lowered-HLO traffic (repro.utils.hlo)
+       "dot_flops_per_sweep",
+       "arithmetic_intensity",       # achieved FLOPs per HBM byte
+    }, ...],
+    "core_fusion": {...},            # megakernel vs split-core HBM bytes
   }
 
 Retrace regression gate (CI runs ``--smoke``): after warmup, every timed call
 must hit the compiled-sweep jit cache. Any retrace during timing — e.g. a
 schedule pytree or static argument churning per call — exits nonzero.
 
+Roofline gates (same run): every case records achieved arithmetic intensity
+and HBM bytes/sweep from the lowered scan program; with ``--baseline OLD.json``
+a case whose intensity regressed >10% vs the same-labeled baseline case fails
+the run. The ``core_fusion`` block measures the fused Kron→scatter→TTM
+megakernel against the split (unfolding kernel → HBM Y → TTM kernel) core
+path and fails unless fused moves strictly fewer bytes. ``--autotune`` also
+times an autotuned Pallas plan per case and fails if it is slower than the
+hand-picked default beyond noise.
+
     PYTHONPATH=src:. python benchmarks/sweep_bench.py [--smoke] [--out PATH]
+        [--baseline OLD.json] [--autotune]
 """
 from __future__ import annotations
 
@@ -100,6 +114,9 @@ def bench_case(
     fit_maxdiff = float(
         np.abs(results["python"].fit_history - results["scan"].fit_history).max()
     )
+    # roofline fields: parse the compiled scan program's HLO (trip-count
+    # multiplied) into FLOPs + approximate HBM traffic per sweep.
+    hlo = plans["scan"].analyze(coo)
     case = {
         "label": label or f"{'x'.join(map(str, shape))}@{density:g}",
         "shape": list(shape),
@@ -117,8 +134,121 @@ def bench_case(
         "dispatches_per_call": {"python": n_iter, "scan": 1},
         "retraces_during_timing": int(retraces),
         "fit_maxdiff": fit_maxdiff,
+        "hbm_bytes_per_sweep": hlo["hbm_bytes_per_sweep"],
+        "dot_flops_per_sweep": hlo["dot_flops_per_sweep"],
+        "arithmetic_intensity": hlo["arithmetic_intensity"],
     }
     return case
+
+
+def bench_autotune_case(shape, density, ranks, method, n_iter) -> dict:
+    """Time the autotuned Pallas scan plan against the hand-picked default.
+
+    The default block config is always in the autotuner's candidate set, so
+    the tuned pick should never be slower beyond timing noise — the
+    acceptance gate the caller enforces."""
+    import jax
+
+    from repro import tucker
+    from repro.kernels import autotune as _autotune
+    from repro.sparse.generators import random_sparse_tensor
+
+    coo = random_sparse_tensor(shape, density, seed=0)
+    plans = {}
+    for label, auto in (("default", False), ("autotuned", True)):
+        plans[label] = tucker.TuckerPlan(
+            tucker.TuckerSpec(
+                shape=tuple(shape), ranks=tuple(ranks), method=method,
+                engine="pallas", pipeline="scan", n_iter=n_iter,
+                autotune=auto,
+            )
+        )
+
+    def timed(label):
+        t0 = time.perf_counter()
+        out = plans[label](coo)
+        jax.block_until_ready(out.core)
+        return time.perf_counter() - t0
+
+    for label in plans:  # warm: search (autotuned), compile, schedules
+        timed(label)
+    samples = {label: [] for label in plans}
+    for _ in range(3):
+        for label in plans:
+            samples[label].append(timed(label))
+    med = {label: float(np.median(s)) for label, s in samples.items()}
+    tuned = plans["autotuned"]._tuned_blocks
+    return {
+        "label": f"{'x'.join(map(str, shape))}@{density:g}",
+        "default_scan_s": med["default"],
+        "autotuned_scan_s": med["autotuned"],
+        "autotune_speedup": med["default"] / max(med["autotuned"], 1e-12),
+        "tuned_blocks": dict(tuned._asdict()) if tuned is not None else None,
+        "counters": dict(_autotune.COUNTERS),
+    }
+
+
+def bench_core_fusion(shape=(24, 18, 2048), ranks=(6, 4, 8), nnz=512) -> dict:
+    """HBM bytes of the core update, megakernel vs split kernels.
+
+    Split = the unfolding kernel materializes Y_(N) to HBM, the blocked TTM
+    kernel reads it back; fused = the Kron→scatter→TTM megakernel keeps each
+    Y block in VMEM scratch and writes only G. Both byte counts come from the
+    lowered programs (``repro.utils.hlo``); parity of the results is checked
+    here too (the numbers must describe the same computation)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.coo import SparseCOO
+    from repro.core.engine import make_engine
+    from repro.kernels import ops
+    from repro.utils.hlo import analyze_hlo
+
+    rng = np.random.default_rng(0)
+    idx = np.stack(
+        [rng.integers(0, s, nnz) for s in shape], axis=1
+    ).astype(np.int32)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    coo = SparseCOO(jnp.asarray(idx), jnp.asarray(vals), tuple(shape))
+    factors = [
+        jnp.asarray(rng.standard_normal((s, r)).astype(np.float32))
+        for s, r in zip(shape, ranks)
+    ]
+    eng = make_engine("pallas")
+    last = len(shape) - 1
+    sched = eng.device_schedule(coo, last)
+    interp = eng.resolved_interpret()
+
+    @jax.jit
+    def split_core(indices, values, fs):
+        y = ops.sparse_ttm_chain_device(
+            indices, values, fs, last, sched, shape=shape, interpret=interp
+        )
+        return ops.ttm(y.T, fs[last].T, interpret=interp).T
+
+    @jax.jit
+    def fused_core(indices, values, fs):
+        return ops.sparse_ttm_core_device(
+            indices, values, fs, last, sched, shape=shape, interpret=interp
+        )
+
+    args = (coo.indices, coo.values, tuple(factors))
+    g_split = split_core(*args)
+    g_fused = fused_core(*args)
+    parity = float(
+        jnp.abs(g_split - g_fused).max() / (jnp.abs(g_split).max() + 1e-12)
+    )
+    b_split = analyze_hlo(split_core.lower(*args).compile().as_text()).io_bytes
+    b_fused = analyze_hlo(fused_core.lower(*args).compile().as_text()).io_bytes
+    return {
+        "shape": list(shape),
+        "ranks": list(ranks),
+        "nnz": int(nnz),
+        "split_hbm_bytes": b_split,
+        "fused_hbm_bytes": b_fused,
+        "bytes_saving": 1.0 - b_fused / max(b_split, 1.0),
+        "parity_relerr": parity,
+    }
 
 
 def main(argv: Optional[list] = None) -> int:
@@ -128,6 +258,13 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--out", default="BENCH_sweep.json")
     ap.add_argument("--engine", default="both",
                     choices=("xla", "pallas", "both"))
+    ap.add_argument("--baseline", default="",
+                    help="prior BENCH_sweep.json: fail if any case's "
+                         "arithmetic intensity regressed >10%% vs it")
+    ap.add_argument("--autotune", action="store_true",
+                    help="also time autotuned Pallas plans vs the "
+                         "hand-picked default (fails if tuned is slower "
+                         "beyond noise)")
     args = ap.parse_args(argv)
 
     import jax
@@ -174,9 +311,33 @@ def main(argv: Optional[list] = None) -> int:
                     f"scan={case['scan_s']*1e3:9.2f}ms "
                     f"speedup={case['speedup']:5.2f}x "
                     f"retraces={case['retraces_during_timing']} "
+                    f"AI={case['arithmetic_intensity']:.3f} "
                     f"({time.time()-t0:.1f}s)",
                     flush=True,
                 )
+
+    core_fusion = bench_core_fusion()
+    print(
+        f"core fusion: split={core_fusion['split_hbm_bytes']:.3g}B "
+        f"fused={core_fusion['fused_hbm_bytes']:.3g}B "
+        f"saving={core_fusion['bytes_saving']*100:.1f}% "
+        f"parity={core_fusion['parity_relerr']:.2e}",
+        flush=True,
+    )
+
+    autotune_cases = []
+    if args.autotune and "pallas" in engines:
+        for label, shape, density, ranks, n_iter, methods in grid:
+            at = bench_autotune_case(shape, density, ranks, methods[0], n_iter)
+            autotune_cases.append(at)
+            print(
+                f"autotune {at['label']:22s} "
+                f"default={at['default_scan_s']*1e3:9.2f}ms "
+                f"tuned={at['autotuned_scan_s']*1e3:9.2f}ms "
+                f"speedup={at['autotune_speedup']:5.2f}x "
+                f"blocks={at['tuned_blocks']}",
+                flush=True,
+            )
 
     payload = {
         "benchmark": "sweep_bench",
@@ -185,6 +346,8 @@ def main(argv: Optional[list] = None) -> int:
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "cases": cases,
+        "core_fusion": core_fusion,
+        "autotune_cases": autotune_cases,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
@@ -206,6 +369,46 @@ def main(argv: Optional[list] = None) -> int:
             print(f"  {c['label']} {c['engine']}/{c['method']}: "
                   f"maxdiff={c['fit_maxdiff']:.2e}")
         return 1
+    if core_fusion["fused_hbm_bytes"] >= core_fusion["split_hbm_bytes"]:
+        print("CORE FUSION REGRESSION: the megakernel moved "
+              f"{core_fusion['fused_hbm_bytes']:.3g}B >= the split path's "
+              f"{core_fusion['split_hbm_bytes']:.3g}B")
+        return 1
+    if core_fusion["parity_relerr"] > 1e-5:
+        print("CORE FUSION PARITY REGRESSION: "
+              f"relerr={core_fusion['parity_relerr']:.2e}")
+        return 1
+    slow_tuned = [a for a in autotune_cases if a["autotune_speedup"] < 0.8]
+    if slow_tuned:
+        print("AUTOTUNE REGRESSION: the tuned config lost to the default "
+              "beyond timing noise:")
+        for a in slow_tuned:
+            print(f"  {a['label']}: {a['autotune_speedup']:.2f}x "
+                  f"({a['tuned_blocks']})")
+        return 1
+    if args.baseline:
+        try:
+            with open(args.baseline) as f:
+                base = {
+                    (c["label"], c["engine"], c["method"]): c
+                    for c in json.load(f).get("cases", [])
+                }
+        except (OSError, ValueError) as e:
+            print(f"baseline unreadable ({e}); skipping intensity gate")
+            base = {}
+        regressed = []
+        for c in cases:
+            b = base.get((c["label"], c["engine"], c["method"]))
+            if b and "arithmetic_intensity" in b:
+                if c["arithmetic_intensity"] < 0.9 * b["arithmetic_intensity"]:
+                    regressed.append((c, b))
+        if regressed:
+            print("INTENSITY REGRESSION vs baseline:")
+            for c, b in regressed:
+                print(f"  {c['label']} {c['engine']}/{c['method']}: "
+                      f"{c['arithmetic_intensity']:.3f} < 0.9 * "
+                      f"{b['arithmetic_intensity']:.3f}")
+            return 1
     return 0
 
 

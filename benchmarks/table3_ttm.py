@@ -17,12 +17,18 @@ import argparse
 import numpy as np
 
 
-def run(i3_list=(32, 64, 128, 256), r=32, engine: str = "both") -> list:
+def run(i3_list=(32, 64, 128, 256), r=32, engine: str = "both",
+        blocks=((None, None),)) -> list:
+    """``blocks`` is a list of (bl, bk) TTM tile shapes to sweep; (None,
+    None) means the kernel defaults. Only the pallas rows vary by block —
+    the XLA reference has no tiles and is reported once per (shape,
+    block) pair for easy row pairing."""
     import jax
     import jax.numpy as jnp
 
     from benchmarks.common import engine_list, time_fn
     from repro.kernels import ops, ref
+    from repro.kernels.ttm_kernel import DEFAULT_BK, DEFAULT_BL
 
     paper = {32: (0.493e-3, 0.148e-3), 64: (0.596e-3, 0.281e-3),
              128: (1.165e-3, 0.546e-3), 256: (2.021e-3, 1.077e-3)}
@@ -35,21 +41,29 @@ def run(i3_list=(32, 64, 128, 256), r=32, engine: str = "both") -> list:
         y = jnp.asarray(rng.standard_normal((l, i3)).astype(np.float32))
         u = jnp.asarray(rng.standard_normal((r, i3)).astype(np.float32))
         want = np.asarray(ref.ttm_ref(y, u))
-        for eng in engines:
-            fn = (lambda a, b: ops.ttm(a, b)) if eng == "pallas" else (
-                lambda a, b: ref_jit(a, b))
-            t, _ = time_fn(fn, y, u)
-            err = float(np.abs(np.asarray(fn(y, u)) - want).max())
-            # analytic kernel occupancy on the v5e target
-            flops = 2 * l * i3 * r
-            vmem = (min(256, l) * min(512, i3) + r * min(512, i3)
-                    + 2 * min(256, l) * r) * 4
-            rows.append(dict(
-                tensor=f"{r}x{r}x{i3}", engine=eng, ms=t * 1e3,
-                maxerr_vs_ref=err, kernel_flops=flops,
-                kernel_vmem_kib=vmem / 1024,
-                paper_cpu_ms=paper[i3][0] * 1e3, paper_fpga_ms=paper[i3][1] * 1e3,
-            ))
+        for bl, bk in blocks:
+            bl_eff = bl if bl is not None else DEFAULT_BL
+            bk_eff = bk if bk is not None else DEFAULT_BK
+            for eng in engines:
+                fn = (
+                    (lambda a, b: ops.ttm(a, b, bl=bl, bk=bk))
+                    if eng == "pallas" else (lambda a, b: ref_jit(a, b))
+                )
+                t, _ = time_fn(fn, y, u)
+                err = float(np.abs(np.asarray(fn(y, u)) - want).max())
+                # analytic kernel occupancy on the v5e target
+                flops = 2 * l * i3 * r
+                vmem = (min(bl_eff, l) * min(bk_eff, i3)
+                        + r * min(bk_eff, i3)
+                        + 2 * min(bl_eff, l) * r) * 4
+                rows.append(dict(
+                    tensor=f"{r}x{r}x{i3}", engine=eng,
+                    block=f"{bl_eff}x{bk_eff}", ms=t * 1e3,
+                    maxerr_vs_ref=err, kernel_flops=flops,
+                    kernel_vmem_kib=vmem / 1024,
+                    paper_cpu_ms=paper[i3][0] * 1e3,
+                    paper_fpga_ms=paper[i3][1] * 1e3,
+                ))
     return rows
 
 
@@ -60,11 +74,20 @@ def main(argv=None):
     # argparse pick up the aggregator's own sys.argv.
     p = argparse.ArgumentParser(description=__doc__)
     add_engine_arg(p)
+    p.add_argument("--block", action="append", default=None,
+                   metavar="BLxBK",
+                   help="TTM tile(s) to sweep, e.g. --block 128x256 "
+                        "--block 256x512 (default: kernel defaults)")
     args = p.parse_args([] if argv is None else argv)
-    print("table3_ttm: tensor,engine,ms,maxerr_vs_ref,kernel_flops,kernel_vmem_kib,"
-          "paper_cpu_ms,paper_fpga_ms")
-    for r in run(engine=args.engine):
-        print(f"{r['tensor']},{r['engine']},{r['ms']:.4f},{r['maxerr_vs_ref']:.2e},"
+    blocks = (
+        [tuple(int(x) for x in b.lower().split("x")) for b in args.block]
+        if args.block else [(None, None)]
+    )
+    print("table3_ttm: tensor,engine,block,ms,maxerr_vs_ref,kernel_flops,"
+          "kernel_vmem_kib,paper_cpu_ms,paper_fpga_ms")
+    for r in run(engine=args.engine, blocks=blocks):
+        print(f"{r['tensor']},{r['engine']},{r['block']},{r['ms']:.4f},"
+              f"{r['maxerr_vs_ref']:.2e},"
               f"{r['kernel_flops']},{r['kernel_vmem_kib']:.0f},"
               f"{r['paper_cpu_ms']:.3f},{r['paper_fpga_ms']:.3f}")
 

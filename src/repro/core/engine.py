@@ -89,6 +89,16 @@ class SweepEngine:
     name: str  # resolved: "xla" or "pallas"
     bn: int = 128
     bi: int = 128
+    # TTM kernel block shape; None = the kernel's own defaults (pallas only).
+    bl: Optional[int] = None
+    bk: Optional[int] = None
+    # "fp32" or "bf16_fp32acc": bf16 operand loads/multiplies with f32
+    # accumulators in the kernels (and bf16 Kron rows on the XLA engine).
+    precision: str = "fp32"
+    # run the core update through the fused Kron→scatter→TTM megakernel
+    # (pallas only; the autotuner's "fused" layout). Off by default so the
+    # split path stays the bitwise baseline.
+    fuse_core: bool = False
     use_kron_reuse: bool = False
     interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
     # cumulative count of host-side schedule constructions + device uploads;
@@ -201,6 +211,22 @@ class SweepEngine:
             self.schedule_builds += 1
         return self.shard_schedules[key]
 
+    def apply_blocks(self, cfg) -> None:
+        """Adopt an autotuned block configuration
+        (:class:`repro.kernels.autotune.BlockConfig`). Changing the schedule
+        geometry (bn/bi) invalidates the cached per-mode layouts — replaying
+        a 128-row schedule against 256-row kernel blocks would be silently
+        wrong — so those rebuild on the next sweep; bl/bk/layout are pure
+        kernel statics and swap freely."""
+        if (int(cfg.bn) != self.bn) or (int(cfg.bi) != self.bi):
+            self.layouts.clear()
+            self.kron_plans.clear()
+            self.dev_schedules.clear()
+            self.shard_schedules.clear()
+        self.bn, self.bi = int(cfg.bn), int(cfg.bi)
+        self.bl, self.bk = int(cfg.bl), int(cfg.bk)
+        self.fuse_core = cfg.layout == "fused"
+
     def resolved_interpret(self) -> bool:
         """The kernel interpret flag this engine will actually run with
         (resolved to a bool so it can be a static jit argument)."""
@@ -220,7 +246,7 @@ class SweepEngine:
 
         if self.use_kron_reuse:
             return sparse_ttm_chain_reuse(coo, factors, mode, self.kron_plan(coo, mode))
-        return sparse_ttm_chain(coo, factors, mode)
+        return sparse_ttm_chain(coo, factors, mode, precision=self.precision)
 
     def _mode_unfolding_pallas(
         self, coo: SparseCOO, factors: Sequence[jax.Array], mode: int
@@ -237,6 +263,7 @@ class SweepEngine:
             self.device_schedule(coo, mode),
             shape=tuple(coo.shape),
             interpret=self.resolved_interpret(),
+            precision=self.precision,
         )
 
     # -- Alg. 2 line 9: core from the last unfolding (module 1) -----------
@@ -245,10 +272,33 @@ class SweepEngine:
         if self.name == "pallas":
             from repro.kernels import ops
 
-            return ops.ttm(y_n.T, u_last.T, interpret=self.interpret).T
+            return ops.ttm(
+                y_n.T, u_last.T, bl=self.bl, bk=self.bk,
+                interpret=self.interpret, precision=self.precision,
+            ).T
         from repro.core.ttm import ttm_unfolded
 
         return ttm_unfolded(y_n.T, u_last.T).T
+
+    def core_update(
+        self, coo: SparseCOO, factors: Sequence[jax.Array], y_n: jax.Array
+    ) -> jax.Array:
+        """The core update with the engine's layout choice applied: the
+        fused megakernel (``fuse_core``, pallas) re-streams the nonzeros so
+        Y_(N) never crosses HBM a second time; otherwise the split blocked
+        TTM over the already-materialized ``y_n``."""
+        n = coo.ndim
+        if self.name == "pallas" and self.fuse_core:
+            from repro.kernels import ops
+
+            return ops.sparse_ttm_core_device(
+                coo.indices, coo.values, factors, n - 1,
+                self.device_schedule(coo, n - 1),
+                shape=tuple(coo.shape),
+                interpret=self.resolved_interpret(),
+                precision=self.precision,
+            )
+        return self.core_unfolding(y_n, factors[n - 1])
 
 
 def make_engine(
@@ -256,14 +306,28 @@ def make_engine(
     *,
     bn: int = 128,
     bi: int = 128,
+    bl: Optional[int] = None,
+    bk: Optional[int] = None,
+    precision: str = "fp32",
+    fuse_core: bool = False,
     use_kron_reuse: bool = False,
     interpret: Optional[bool] = None,
 ) -> SweepEngine:
     """Resolve ``engine`` and build a reusable :class:`SweepEngine`."""
+    from repro.kernels.kron_kernel import PRECISIONS
+
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"precision must be one of {PRECISIONS}, got {precision!r}"
+        )
     return SweepEngine(
         name=resolve_engine(engine),
         bn=bn,
         bi=bi,
+        bl=bl,
+        bk=bk,
+        precision=precision,
+        fuse_core=fuse_core,
         use_kron_reuse=use_kron_reuse,
         interpret=interpret,
     )

@@ -100,7 +100,11 @@ def init_factors(
     for k, (i, r) in zip(keys, zip(shape, ranks)):
         u = jax.random.normal(k, (i, r), dtype=dtype)
         if orthonormal:
-            u, _ = jnp.linalg.qr(u)
+            # lapack has no half-precision QR: orthonormalize at >= f32 and
+            # cast back to the working dtype.
+            qdt = jnp.promote_types(dtype, jnp.float32)
+            q, _ = jnp.linalg.qr(u.astype(qdt))
+            u = q.astype(dtype)
         factors.append(u)
     return factors
 
@@ -195,7 +199,7 @@ def sparse_sweep(
     # y_n is Y_(N): (I_N, R_1*...*R_{N-1}); the TTM module computes
     # G_(N) = U_N^T Y_(N)  — this is the paper's FPGA TTM (Eq. 12).
     if engine is not None:
-        g_n = engine.core_unfolding(y_n, factors[n - 1])  # (R_N, prod R_t)
+        g_n = engine.core_update(coo, factors, y_n)  # (R_N, prod R_t)
     else:
         g_n = ttm_unfolded(y_n.T, factors[n - 1].T).T  # (R_N, prod R_t)
     core = fold_dense(g_n, n - 1, list(ranks))
@@ -264,7 +268,10 @@ def _sweep_scan(
             fs[mode] = factor_update(y_n, ranks[mode], method).astype(
                 init_dtypes[mode]
             )
-        g_n = core_unfolding(y_n, fs[n - 1])
+        # the core update sees the POST-update factor list (only fs[n-1]
+        # changed since y_n was built) — the fused megakernel re-gathers
+        # from it, the split path contracts y_n against fs[n-1] directly.
+        g_n = core_unfolding(fs, y_n)
         core = fold_dense(g_n, n - 1, list(ranks)).astype(core_dtype)
         err = (
             jnp.sqrt(jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0))
@@ -307,12 +314,15 @@ def _sweep_scan(
 
 
 def _engine_unfoldings(
-    indices, values, scheds, *, shape, engine_name, interpret, use_reuse
+    indices, values, scheds, *, shape, engine_name, interpret, use_reuse,
+    precision="fp32", bl=None, bk=None, fuse_core=False,
 ):
     """The one place a compiled pipeline's per-mode unfolding / core update
     come from — shared by the full-run scan program and the snapshot segment
     program so engine routing (pallas kernels, Kron-reuse dedup, plain XLA)
-    cannot drift between them."""
+    cannot drift between them. ``precision``/``bl``/``bk``/``fuse_core`` are
+    the autotuner-facing statics: kernel block shapes, the mixed-precision
+    axis, and the fused-megakernel core layout (pallas only)."""
 
     def mode_unfolding(fs, mode):
         if engine_name == "pallas":
@@ -320,20 +330,34 @@ def _engine_unfoldings(
 
             return ops.sparse_ttm_chain_device(
                 indices, values, fs, mode, scheds[mode],
-                shape=shape, interpret=interpret,
+                shape=shape, interpret=interpret, precision=precision,
             )
         if use_reuse:
             return sparse_ttm_chain_reuse_device(
                 indices, values, fs, mode, scheds[mode], shape=shape
             )
-        return sparse_ttm_chain(SparseCOO(indices, values, shape), fs, mode)
+        return sparse_ttm_chain(
+            SparseCOO(indices, values, shape), fs, mode, precision=precision
+        )
 
-    def core_unfolding(y_n, u_last):
+    def core_unfolding(fs, y_n):
+        n = len(shape)
         if engine_name == "pallas":
             from repro.kernels import ops
 
-            return ops.ttm(y_n.T, u_last.T, interpret=interpret).T
-        return ttm_unfolded(y_n.T, u_last.T).T
+            if fuse_core:
+                # megakernel: G = U^T Y with Y rebuilt in VMEM from the
+                # nonzeros — the unfolding never crosses HBM a second time
+                # (the factor-row gathers CSE with mode_unfolding's).
+                return ops.sparse_ttm_core_device(
+                    indices, values, fs, n - 1, scheds[n - 1],
+                    shape=shape, interpret=interpret, precision=precision,
+                )
+            return ops.ttm(
+                y_n.T, fs[n - 1].T, bl=bl, bk=bk, interpret=interpret,
+                precision=precision,
+            ).T
+        return ttm_unfolded(y_n.T, fs[n - 1].T).T
 
     return mode_unfolding, core_unfolding
 
@@ -353,6 +377,10 @@ def _scan_sweeps_impl(
     engine_name,
     interpret,
     use_reuse,
+    precision="fp32",
+    bl=None,
+    bk=None,
+    fuse_core=False,
 ):
     # trace-time only: cache hits never reach this line.
     SWEEP_TRACE_COUNTS[(engine_name, shape, tuple(ranks), method, n_iter)] += 1
@@ -360,7 +388,8 @@ def _scan_sweeps_impl(
     mode_unfolding, core_unfolding = _engine_unfoldings(
         indices, values, scheds,
         shape=shape, engine_name=engine_name, interpret=interpret,
-        use_reuse=use_reuse,
+        use_reuse=use_reuse, precision=precision, bl=bl, bk=bk,
+        fuse_core=fuse_core,
     )
     fs, core, hist, _ = _sweep_scan(
         mode_unfolding, core_unfolding, factors, xnorm2, tol,
@@ -377,7 +406,7 @@ _scan_sweeps = partial(
     jax.jit,
     static_argnames=(
         "shape", "ranks", "method", "n_iter", "engine_name", "interpret",
-        "use_reuse",
+        "use_reuse", "precision", "bl", "bk", "fuse_core",
     ),
     donate_argnames=("factors",),
 )(_scan_sweeps_impl)
@@ -403,6 +432,10 @@ def _segment_scan_sweeps_impl(
     engine_name,
     interpret,
     use_reuse,
+    precision="fp32",
+    bl=None,
+    bk=None,
+    fuse_core=False,
 ):
     """One snapshot segment: ``segment_len`` sweeps of the SAME skeleton as
     ``_scan_sweeps``, continuing from an explicit carry. ``total_sweeps`` is
@@ -417,7 +450,8 @@ def _segment_scan_sweeps_impl(
     mode_unfolding, core_unfolding = _engine_unfoldings(
         indices, values, scheds,
         shape=shape, engine_name=engine_name, interpret=interpret,
-        use_reuse=use_reuse,
+        use_reuse=use_reuse, precision=precision, bl=bl, bk=bk,
+        fuse_core=fuse_core,
     )
     return _sweep_scan(
         mode_unfolding, core_unfolding, factors, xnorm2, tol,
@@ -435,7 +469,7 @@ _segment_scan_sweeps = partial(
     jax.jit,
     static_argnames=(
         "shape", "ranks", "method", "segment_len", "engine_name", "interpret",
-        "use_reuse",
+        "use_reuse", "precision", "bl", "bk", "fuse_core",
     ),
 )(_segment_scan_sweeps_impl)
 
@@ -527,8 +561,8 @@ def build_sharded_program(mesh, nnz_axes, *, shape, ranks, method, n_iter,
             )
             return jax.lax.psum(partial_y, nnz_axes)
 
-        def core_unfolding(y_n, u_last):
-            return ttm_unfolded(y_n.T, u_last.T).T
+        def core_unfolding(fs, y_n):
+            return ttm_unfolded(y_n.T, fs[-1].T).T
 
         return mode_unfolding, core_unfolding
 

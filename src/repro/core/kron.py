@@ -73,6 +73,7 @@ def sparse_ttm_chain(
     coo: SparseCOO,
     factors: Sequence[jax.Array],
     skip_mode: int,
+    precision: str = "fp32",
 ) -> jax.Array:
     """Sparse power-iteration TTM chain (Alg. 2 lines 4-5).
 
@@ -85,6 +86,10 @@ def sparse_ttm_chain(
       factors: list of N factor matrices, U_t of shape (I_t, R_t). The entry
         at ``skip_mode`` is ignored.
       skip_mode: the mode n that is *not* contracted.
+      precision: "fp32" (legacy, full working precision) or "bf16_fp32acc":
+        the gathered factor rows and their Kronecker products run in
+        bfloat16, the value scale and the scatter-add accumulate in f32 —
+        the XLA-engine mirror of the kernels' mixed mode.
 
     Returns:
       Y_(n) of shape (I_n, prod_{t != n} R_t), f32.
@@ -92,8 +97,15 @@ def sparse_ttm_chain(
     if coo.indices.shape[0] == 0:
         return zero_unfolding(coo.shape, factors, skip_mode)
     rows = gathered_factor_rows(coo, factors, skip_mode)
-    k = kron_rows(rows)  # (nnz, K)
-    dt = jnp.promote_types(jnp.promote_types(coo.values.dtype, k.dtype), jnp.float32)
+    if precision == "bf16_fp32acc":
+        rows = [r.astype(jnp.bfloat16) for r in rows]
+        k = kron_rows(rows)  # (nnz, K) bf16 multiplies
+        dt = jnp.promote_types(coo.values.dtype, jnp.float32)
+    else:
+        k = kron_rows(rows)  # (nnz, K)
+        dt = jnp.promote_types(
+            jnp.promote_types(coo.values.dtype, k.dtype), jnp.float32
+        )
     contrib = k.astype(dt) * coo.values.astype(dt)[:, None]
     i_n = coo.indices[:, skip_mode]
     out = jnp.zeros((coo.shape[skip_mode], k.shape[1]), dtype=dt)

@@ -26,7 +26,7 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale,
-                  causal, block_q, block_k, t_len, s_len):
+                  causal, block_q, block_k, t_len, s_len, t_padded):
     kb = pl.program_id(2)
 
     @pl.when(kb == 0)
@@ -40,6 +40,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale,
     v = v_ref[0]  # (BK, D)
     logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (BQ, BK)
 
+    if t_padded:
+        # kv rows past the real length are padding: mask them for EVERY
+        # query row (the causal term alone cannot — non-causal queries see
+        # all positions).
+        kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(kpos < t_len, logits, NEG_INF)
     if causal:
         qb = pl.program_id(1)
         qpos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
@@ -93,12 +99,9 @@ def flash_attention_pallas(
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
     kp = jnp.pad(k, ((0, 0), (0, 0), (0, tp - t), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, 0), (0, tp - t), (0, 0)))
-    # pad keys beyond t with NEG_INF via masking in-kernel: padded kv rows
-    # produce logits of ~0 * scale — mask them through the causal term by
-    # treating them as future positions. For the non-causal path we instead
-    # rely on t == tp (enforce).
-    if not causal:
-        assert t == tp, "non-causal path requires t % block_k == 0"
+    # padded kv rows are masked to NEG_INF in-kernel via the kv-length term
+    # (works for causal and non-causal alike); padded query rows compute
+    # garbage that the final slice drops.
     qp = qp.reshape(b * h, sp, d)
     kp = kp.reshape(b * kvh, tp, d)
     vp = vp.reshape(b * kvh, tp, d)
@@ -106,11 +109,12 @@ def flash_attention_pallas(
     kernel = functools.partial(
         _flash_kernel,
         scale=scale_,
-        causal=causal or (tp != t),
+        causal=causal,
         block_q=bq,
         block_k=bk,
         t_len=t,
         s_len=s,
+        t_padded=tp != t,
     )
     out = pl.pallas_call(
         kernel,

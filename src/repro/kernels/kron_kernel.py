@@ -35,6 +35,23 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BN = 128  # nonzeros per block
 DEFAULT_BI = 128  # output rows per block
 
+# mixed-precision axis shared by every kernel in this module: "fp32" keeps
+# the legacy all-f32 pipeline; "bf16_fp32acc" loads/multiplies the gathered
+# factor rows in bfloat16 while every accumulator (the one-hot matmul, the
+# resident Y block, the core contraction) stays f32 — the MXU's native mode.
+PRECISIONS = ("fp32", "bf16_fp32acc")
+
+
+def _cast_operands(precision: str, *arrays):
+    """Apply the kernel-input side of the precision axis (bf16 loads)."""
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"precision must be one of {PRECISIONS}, got {precision!r}"
+        )
+    if precision == "bf16_fp32acc":
+        return tuple(a.astype(jnp.bfloat16) for a in arrays)
+    return arrays
+
 
 # ---------------------------------------------------------------------------
 # Kernel 1: Kronecker rows (Alg. 4), blocked over nonzeros.
@@ -53,7 +70,7 @@ def _kron_kernel(a_ref, b_ref, v_ref, o_ref):
     o_ref[...] = (kron * v).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bn", "interpret", "precision"))
 def kron_contrib_pallas(
     a: jax.Array,
     b: jax.Array,
@@ -61,6 +78,7 @@ def kron_contrib_pallas(
     *,
     bn: int = DEFAULT_BN,
     interpret: bool = True,
+    precision: str = "fp32",
 ) -> jax.Array:
     """contrib[t] = v[t] * (a[t] (x) b[t]) for a block-padded batch.
 
@@ -68,6 +86,7 @@ def kron_contrib_pallas(
       a: (nnz, Ra) gathered rows U_j(i_j, :).
       b: (nnz, Rb) gathered rows U_k(i_k, :).
       v: (nnz,) nonzero values.
+      precision: "fp32" or "bf16_fp32acc" (bf16 outer products, f32 scale).
     Returns:
       (nnz, Ra*Rb) f32 contributions.
     """
@@ -79,6 +98,7 @@ def kron_contrib_pallas(
         a = jnp.pad(a, ((0, pad), (0, 0)))
         b = jnp.pad(b, ((0, pad), (0, 0)))
         v = jnp.pad(v, ((0, pad),))
+    a, b = _cast_operands(precision, a, b)
     nnzp = a.shape[0]
     out = pl.pallas_call(
         _kron_kernel,
@@ -114,6 +134,7 @@ class ScatterPlan(NamedTuple):
     rel_row: np.ndarray  # (nnz_padded,) row index within the target block
     blkmap: np.ndarray  # (nblocks,) target row-block per nnz block
     first: np.ndarray  # (nblocks,) 1 if first block of its target
+    last: np.ndarray  # (nblocks,) 1 if last block of its target
     n_row_blocks: int
     bn: int
     bi: int
@@ -129,7 +150,7 @@ def build_scatter_plan(
     implementation of the pad/group/order construction for both plan types)."""
     from repro.sparse.layout import build_schedule, visited_row_mask
 
-    order, valid, rel, blkmap, first, n_row_blocks, _ = build_schedule(
+    order, valid, rel, blkmap, first, last, n_row_blocks, _ = build_schedule(
         rows, n_rows, bn, bi
     )
     return ScatterPlan(
@@ -138,6 +159,7 @@ def build_scatter_plan(
         rel_row=rel,
         blkmap=blkmap,
         first=first,
+        last=last,
         n_row_blocks=n_row_blocks,
         bn=bn,
         bi=bi,
@@ -252,11 +274,16 @@ def _fused_kernel(blkmap_ref, first_ref, a_ref, b_ref, v_ref, rel_ref, o_ref):
     o_ref[...] += jnp.dot(onehot.T, contrib, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("n_rows", "bn", "bi", "interpret"))
-def _fused_call(blkmap, first, a, b, v, rel, *, n_rows, bn, bi, interpret):
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "bn", "bi", "interpret", "precision")
+)
+def _fused_call(
+    blkmap, first, a, b, v, rel, *, n_rows, bn, bi, interpret, precision="fp32"
+):
     nblocks = blkmap.shape[0]
     n_row_blocks = -(-n_rows // bi)
     ra, rb = a.shape[1], b.shape[1]
+    a, b = _cast_operands(precision, a, b)
     out = pl.pallas_call(
         _fused_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -284,6 +311,7 @@ def fused_kron_scatter_pallas(
     n_rows: int,
     *,
     interpret: bool = True,
+    precision: str = "fp32",
 ) -> jax.Array:
     """Y_(n)[i_n] += v * (a (x) b), fused: Alg. 4 + Eq. 13 in one kernel.
 
@@ -302,5 +330,141 @@ def fused_kron_scatter_pallas(
         bn=plan.bn,
         bi=plan.bi,
         interpret=interpret,
+        precision=precision,
     )
     return _mask_unvisited(out, plan, n_rows)
+
+
+# ---------------------------------------------------------------------------
+# Megakernel: Kron rows + one-hot scatter + core TTM in one pipeline step.
+# ---------------------------------------------------------------------------
+
+
+def _mega_kernel(
+    blkmap_ref, first_ref, last_ref, a_ref, b_ref, v_ref, rel_ref, u_ref,
+    g_ref, y_ref,
+):
+    """One nnz block of the fused core update G_(N) = U_N^T Y_(N) (Eq. 12):
+    rebuild the target Y row block in VMEM scratch from the streamed nonzeros
+    (Alg. 4 outer products + one-hot scatter — Y never touches HBM in this
+    pass), then, at each row-block group's LAST nnz block, contract the
+    finished block into the grid-resident (R, K) core accumulator. The output
+    block's index map is constant, so ``g_ref`` stays in VMEM for the whole
+    grid (Pallas revisiting rule) — the closest TPU analogue of the paper's
+    FPGA keeping both the BRAM row batch and the TTM accumulator on chip."""
+    blk = pl.program_id(0)
+
+    @pl.when(blk == 0)
+    def _init_core():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    @pl.when(first_ref[blk] == 1)
+    def _init_rows():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a = a_ref[...]  # (BN, Ra)
+    b = b_ref[...]  # (BN, Rb)
+    v = v_ref[...]  # (BN, 1) f32, zero on padding rows
+    bn, ra = a.shape
+    rb = b.shape[1]
+    kron = (a[:, :, None] * b[:, None, :]).reshape(bn, ra * rb)
+    contrib = kron.astype(jnp.float32) * v
+    rel = rel_ref[...]  # (BN, 1) int32
+    bi = y_ref.shape[0]
+    onehot = (rel == jax.lax.broadcasted_iota(jnp.int32, (bn, bi), 1)).astype(
+        jnp.float32
+    )
+    y_ref[...] += jnp.dot(onehot.T, contrib, preferred_element_type=jnp.float32)
+
+    @pl.when(last_ref[blk] == 1)
+    def _contract():
+        # (Rp, BI) @ (BI, K): the finished row block feeds the MXU directly
+        # from VMEM. f32 accumulation regardless of the load precision.
+        u = u_ref[...].astype(jnp.float32)
+        g_ref[...] += jnp.dot(u.T, y_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "bn", "bi", "interpret", "precision")
+)
+def _mega_call(
+    blkmap, first, last, a, b, v, rel, u, *, n_rows, bn, bi, interpret,
+    precision="fp32",
+):
+    nblocks = blkmap.shape[0]
+    n_row_blocks = -(-n_rows // bi)
+    ra, rb = a.shape[1], b.shape[1]
+    k = ra * rb
+    r = u.shape[1]
+    rp = -(-r // 8) * 8  # sublane-aligned core rows
+    # pad U to the grid's padded row extent so block (bi, rp) slices line up
+    # with the scratch Y blocks; padding rows/cols contract to exact zeros.
+    up = jnp.pad(
+        u.astype(jnp.float32),
+        ((0, n_row_blocks * bi - u.shape[0]), (0, rp - r)),
+    )
+    a, b, up = _cast_operands(precision, a, b, up)
+    out = pl.pallas_call(
+        _mega_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(nblocks,),
+            in_specs=[
+                pl.BlockSpec((bn, ra), lambda blk, m, f, e: (blk, 0)),
+                pl.BlockSpec((bn, rb), lambda blk, m, f, e: (blk, 0)),
+                pl.BlockSpec((bn, 1), lambda blk, m, f, e: (blk, 0)),
+                pl.BlockSpec((bn, 1), lambda blk, m, f, e: (blk, 0)),
+                pl.BlockSpec((bi, rp), lambda blk, m, f, e: (m[blk], 0)),
+            ],
+            out_specs=pl.BlockSpec((rp, k), lambda blk, m, f, e: (0, 0)),
+            scratch_shapes=[pltpu.VMEM((bi, k), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((rp, k), jnp.float32),
+        interpret=interpret,
+    )(blkmap, first, last, a, b, v[:, None].astype(jnp.float32), rel[:, None], up)
+    return out[:r]
+
+
+def fused_kron_scatter_ttm_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    v: jax.Array,
+    u: jax.Array,
+    plan,
+    n_rows: int,
+    *,
+    interpret: bool = True,
+    precision: str = "fp32",
+) -> jax.Array:
+    """G = U^T Y where Y[i_n] += v * (a (x) b) — Alg. 4 + Eq. 13 + Eq. 12
+    in ONE kernel, with Y living only in VMEM scratch.
+
+    ``a``, ``b``, ``v`` follow the same contract as
+    :func:`fused_kron_scatter_pallas` (permuted by ``plan.order``, padding
+    zeroed); ``u`` is the (n_rows, R) factor of the skipped mode. ``plan``
+    must carry the ``last`` block flags (any schedule built by
+    ``sparse.layout.build_schedule``). Row blocks with no nonzeros contribute
+    exact zeros (their U rows never meet a resident Y block), so no
+    row-masking is needed on the (R, K) output.
+    """
+    last = getattr(plan, "last", None)
+    if last is None:
+        raise ValueError(
+            "fused core update needs a schedule with 'last' block flags — "
+            "rebuild the plan with the current sparse.layout.build_schedule"
+        )
+    return _mega_call(
+        jnp.asarray(plan.blkmap),
+        jnp.asarray(plan.first),
+        jnp.asarray(last),
+        a,
+        b,
+        v,
+        jnp.asarray(plan.rel_row),
+        u,
+        n_rows=n_rows,
+        bn=plan.bn,
+        bi=plan.bi,
+        interpret=interpret,
+        precision=precision,
+    )

@@ -23,7 +23,7 @@ def default_interpret() -> bool:
 
 
 def ttm(y: jax.Array, u: jax.Array, *, bl: Optional[int] = None, bk: Optional[int] = None,
-        interpret: Optional[bool] = None) -> jax.Array:
+        interpret: Optional[bool] = None, precision: str = "fp32") -> jax.Array:
     """Paper TTM module: G = Y @ U^T (Eq. 12) via the Pallas kernel."""
     kw = {}
     if bl is not None:
@@ -31,15 +31,20 @@ def ttm(y: jax.Array, u: jax.Array, *, bl: Optional[int] = None, bk: Optional[in
     if bk is not None:
         kw["bk"] = bk
     return ttm_kernel.ttm_pallas(
-        y, u, interpret=default_interpret() if interpret is None else interpret, **kw
+        y, u, interpret=default_interpret() if interpret is None else interpret,
+        precision=precision, **kw
     )
 
 
 def kron_contrib(a: jax.Array, b: jax.Array, v: jax.Array, *,
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 bn: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 precision: str = "fp32") -> jax.Array:
     """Paper Kronecker module (Alg. 4) over a batch of nonzeros."""
+    kw = {} if bn is None else {"bn": bn}
     return kron_kernel.kron_contrib_pallas(
-        a, b, v, interpret=default_interpret() if interpret is None else interpret
+        a, b, v, interpret=default_interpret() if interpret is None else interpret,
+        precision=precision, **kw
     )
 
 
@@ -77,6 +82,21 @@ def sparse_ttm_chain_kernel(
     )
 
 
+def _gathered_block_rows(indices, values, factors, skip_mode, sched, n):
+    """Gather the non-mode factor rows in the schedule's block order (padding
+    slots gather row 0 with value 0). Shared by the unfolding chain and the
+    fused core update, with identical operands on purpose: when both run in
+    one program (the megakernel re-streams the same nonzeros the mode-(N-1)
+    unfolding just consumed), XLA CSEs the gathers instead of re-reading."""
+    idx = indices[sched.order]
+    vals = values[sched.order] * sched.valid
+    modes = [t for t in range(n - 1, -1, -1) if t != skip_mode]
+    rows = [factors[t][idx[:, t]] for t in modes]
+    if len(rows) == 1:  # order-2 tensor: the "Kron row" is a single factor row
+        rows.append(jnp.ones((rows[0].shape[0], 1), dtype=rows[0].dtype))
+    return rows, vals
+
+
 def sparse_ttm_chain_device(
     indices: jax.Array,
     values: jax.Array,
@@ -87,6 +107,7 @@ def sparse_ttm_chain_device(
     shape: Sequence[int],
     interpret: bool,
     fused: bool = True,
+    precision: str = "fp32",
 ) -> jax.Array:
     """Trace-safe twin of :func:`sparse_ttm_chain_kernel` for the compiled
     scan-over-sweeps pipeline: the schedule (``sched``, a
@@ -100,20 +121,61 @@ def sparse_ttm_chain_device(
         from repro.core.kron import zero_unfolding
 
         return zero_unfolding(tuple(shape), factors, skip_mode)
-    idx = indices[sched.order]
-    vals = values[sched.order] * sched.valid
-    modes = [t for t in range(n - 1, -1, -1) if t != skip_mode]
-    rows = [factors[t][idx[:, t]] for t in modes]
-    if len(rows) == 1:  # order-2 tensor: the "Kron row" is a single factor row
-        rows.append(jnp.ones((rows[0].shape[0], 1), dtype=rows[0].dtype))
+    rows, vals = _gathered_block_rows(indices, values, factors, skip_mode, sched, n)
     if len(rows) == 2 and fused:
         return kron_kernel.fused_kron_scatter_pallas(
-            rows[0], rows[1], vals, sched, n_rows, interpret=interpret
+            rows[0], rows[1], vals, sched, n_rows, interpret=interpret,
+            precision=precision,
         )
-    contrib = kron_contrib(rows[0], rows[1], vals, interpret=interpret)
+    contrib = kron_contrib(
+        rows[0], rows[1], vals, interpret=interpret, precision=precision
+    )
     for extra in rows[2:]:
         contrib = kron_contrib(contrib, extra, jnp.ones_like(vals), interpret=interpret)
     return kron_kernel.scatter_rows_pallas(contrib, sched, n_rows, interpret=interpret)
+
+
+def sparse_ttm_core_device(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: Sequence[jax.Array],
+    skip_mode: int,
+    sched,
+    *,
+    shape: Sequence[int],
+    interpret: bool,
+    precision: str = "fp32",
+) -> jax.Array:
+    """Fused core update (Eq. 12): G_(N) = U_N^T Y_(N) WITHOUT materializing
+    Y_(N) — the megakernel re-streams the nonzeros through the Kron→scatter
+    pipeline into VMEM scratch and contracts each finished row block against
+    the (just updated) factor in the same grid step. The gathers match the
+    mode-``skip_mode`` unfolding's exactly, so inside one compiled sweep XLA
+    dedups them; the (I_n x K) unfolding itself never crosses HBM a second
+    time. Returns (R_N, prod_{t != skip} R_t) f32.
+
+    Orders > 3 fall back to the split path (chained Kron + blocked TTM): the
+    megakernel streams exactly two operand blocks, the paper's case.
+    """
+    n = len(shape)
+    n_rows = int(shape[skip_mode])
+    u = factors[skip_mode]
+    if indices.shape[0] == 0:
+        from repro.core.kron import zero_unfolding
+
+        y0 = zero_unfolding(tuple(shape), factors, skip_mode)
+        return jnp.zeros((u.shape[1], y0.shape[1]), dtype=jnp.float32)
+    rows, vals = _gathered_block_rows(indices, values, factors, skip_mode, sched, n)
+    if len(rows) == 2:
+        return kron_kernel.fused_kron_scatter_ttm_pallas(
+            rows[0], rows[1], vals, u, sched, n_rows, interpret=interpret,
+            precision=precision,
+        )
+    y = sparse_ttm_chain_device(
+        indices, values, factors, skip_mode, sched,
+        shape=shape, interpret=interpret, precision=precision,
+    )
+    return ttm(y.T, u.T, interpret=interpret, precision=precision).T
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: Optional[float] = None,

@@ -58,7 +58,7 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, pad)
 
 
-@functools.partial(jax.jit, static_argnames=("bl", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bl", "bk", "interpret", "precision"))
 def ttm_pallas(
     y: jax.Array,
     u: jax.Array,
@@ -66,6 +66,7 @@ def ttm_pallas(
     bl: int = DEFAULT_BL,
     bk: int = DEFAULT_BK,
     interpret: bool = True,
+    precision: str = "fp32",
 ) -> jax.Array:
     """``G = Y @ U^T`` — the paper's TTM (Eq. 12) as a tiled Pallas kernel.
 
@@ -75,6 +76,8 @@ def ttm_pallas(
       bl, bk: VMEM block shape knobs (rows / contraction).
       interpret: run the kernel body in interpret mode (CPU container);
         on a real TPU pass False.
+      precision: "fp32", or "bf16_fp32acc" for bf16 operand loads/multiplies
+        with the f32 VMEM scratch accumulator (the MXU's native mixed mode).
 
     VMEM budget per step: bl*bk (Y) + R3p*bk (U) + bl*R3p (acc+out), f32
     -> with defaults and R3<=512: 256*512*4 + 512*512*4 + 2*256*512*4
@@ -91,6 +94,9 @@ def ttm_pallas(
     # pad everything to tile multiples (MXU-aligned lanes).
     yp = _pad_to(_pad_to(y, 0, bl_), 1, bk_)
     up = _pad_to(_pad_to(u, 0, 8), 1, bk_)
+    from repro.kernels.kron_kernel import _cast_operands
+
+    yp, up = _cast_operands(precision, yp, up)
     lp, i3p = yp.shape
     r3p = up.shape[0]
     grid = (lp // bl_, i3p // bk_)

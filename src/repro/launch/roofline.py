@@ -26,39 +26,88 @@ term, and the roofline fraction (useful time / dominant-term time).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 from pathlib import Path
 from typing import Dict, List
 
-PEAK_FLOPS = 197e12  # bf16 / chip
-HBM_BW = 819e9  # bytes/s / chip
-ICI_BW = 50e9  # bytes/s/link
-DCN_BW = 25e9  # pod-crossing axis
-HBM_PER_CHIP = 16 * 2**30  # v5e
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    """Peak machine numbers the roofline terms divide by. The module-level
+    constants below mirror the default ('tpu-v5e') preset for backward
+    compatibility; pick another preset with ``--arch`` or override any
+    single number with the ``--peak-flops/--hbm-bw/--ici-bw`` flags."""
+
+    peak_flops: float  # matmul FLOP/s per chip (bf16)
+    hbm_bw: float  # HBM bytes/s per chip
+    ici_bw: float  # interconnect bytes/s per link
+    dcn_bw: float  # pod-crossing bytes/s
+    hbm_per_chip: int  # HBM capacity per chip (bytes)
+
+
+ARCH_PRESETS: Dict[str, ArchSpec] = {
+    "tpu-v5e": ArchSpec(197e12, 819e9, 50e9, 25e9, 16 * 2**30),
+    "tpu-v5p": ArchSpec(459e12, 2765e9, 100e9, 25e9, 95 * 2**30),
+    "tpu-v4": ArchSpec(275e12, 1228e9, 50e9, 25e9, 32 * 2**30),
+    "tpu-v6e": ArchSpec(918e12, 1640e9, 100e9, 25e9, 32 * 2**30),
+}
+DEFAULT_ARCH = "tpu-v5e"
+
+# legacy module-level constants (== the tpu-v5e preset): existing importers
+# keep working; the CLI path resolves an ArchSpec instead.
+PEAK_FLOPS = ARCH_PRESETS[DEFAULT_ARCH].peak_flops  # bf16 / chip
+HBM_BW = ARCH_PRESETS[DEFAULT_ARCH].hbm_bw  # bytes/s / chip
+ICI_BW = ARCH_PRESETS[DEFAULT_ARCH].ici_bw  # bytes/s/link
+DCN_BW = ARCH_PRESETS[DEFAULT_ARCH].dcn_bw  # pod-crossing axis
+HBM_PER_CHIP = ARCH_PRESETS[DEFAULT_ARCH].hbm_per_chip  # v5e
+
+
+def resolve_arch(
+    arch: str = DEFAULT_ARCH,
+    *,
+    peak_flops: float = 0.0,
+    hbm_bw: float = 0.0,
+    ici_bw: float = 0.0,
+) -> ArchSpec:
+    """The preset named ``arch`` with any nonzero override applied on top."""
+    if arch not in ARCH_PRESETS:
+        raise ValueError(
+            f"unknown arch {arch!r}; presets: {sorted(ARCH_PRESETS)}"
+        )
+    spec = ARCH_PRESETS[arch]
+    return dataclasses.replace(
+        spec,
+        peak_flops=peak_flops or spec.peak_flops,
+        hbm_bw=hbm_bw or spec.hbm_bw,
+        ici_bw=ici_bw or spec.ici_bw,
+    )
 
 
 def chips(rec: dict) -> int:
     return 512 if rec["mesh"] == "2x16x16" else 256
 
 
-def roofline_terms(rec: dict) -> Dict[str, float]:
+def roofline_terms(rec: dict, arch: ArchSpec = None) -> Dict[str, float]:
     from repro.configs import SHAPES, get_config
     from repro.models.flops import cell_cost
 
+    if arch is None:
+        arch = ARCH_PRESETS[DEFAULT_ARCH]
     cfg = get_config(rec["arch"])
     cost = cell_cost(cfg, SHAPES[rec["shape"]])
     c = chips(rec)
-    compute_s = cost.flops / (c * PEAK_FLOPS)
-    memory_s = cost.hbm_bytes / (c * HBM_BW)
+    compute_s = cost.flops / (c * arch.peak_flops)
+    memory_s = cost.hbm_bytes / (c * arch.hbm_bw)
     coll_bytes = rec["hlo"]["total_coll_bytes"]  # per device, measured
-    collective_s = coll_bytes / ICI_BW
+    collective_s = coll_bytes / arch.ici_bw
     mf = cost.model_flops
     terms = dict(compute_s=compute_s, memory_s=memory_s,
                  collective_s=collective_s)
     dominant = max(terms.items(), key=lambda kv: kv[1])[0].replace("_s", "")
     bound = max(terms.values())
     useful = mf / cost.flops if cost.flops else 0.0
-    mfu_bound = (mf / c / PEAK_FLOPS) / bound if bound else 0.0
+    mfu_bound = (mf / c / arch.peak_flops) / bound if bound else 0.0
     mem = rec.get("memory", {})
     return dict(
         **terms,
@@ -67,7 +116,7 @@ def roofline_terms(rec: dict) -> Dict[str, float]:
         useful_ratio=useful,
         roofline_frac=mfu_bound,
         hlo_dot_flops=rec["hlo"]["dot_flops"] * c,  # diagnostic (global)
-        fits=(mem.get("peak_tpu_est_bytes", 0) or 0) <= HBM_PER_CHIP,
+        fits=(mem.get("peak_tpu_est_bytes", 0) or 0) <= arch.hbm_per_chip,
         peak_gib=(mem.get("peak_tpu_est_bytes", 0) or 0) / 2**30,
     )
 
@@ -79,8 +128,8 @@ HEADER = (
 )
 
 
-def fmt_row(rec: dict) -> str:
-    t = roofline_terms(rec)
+def fmt_row(rec: dict, arch: ArchSpec = None) -> str:
+    t = roofline_terms(rec, arch)
     return (
         f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
         f"| {t['compute_s']*1e3:9.2f} | {t['memory_s']*1e3:9.2f} "
@@ -94,7 +143,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("records", help="dryrun JSON")
     ap.add_argument("--md", default="", help="write markdown table here")
+    ap.add_argument("--arch", default=DEFAULT_ARCH,
+                    choices=sorted(ARCH_PRESETS),
+                    help="peak-number preset the roofline divides by")
+    ap.add_argument("--peak-flops", type=float, default=0.0,
+                    help="override peak matmul FLOP/s per chip")
+    ap.add_argument("--hbm-bw", type=float, default=0.0,
+                    help="override HBM bytes/s per chip")
+    ap.add_argument("--ici-bw", type=float, default=0.0,
+                    help="override interconnect bytes/s per link")
     args = ap.parse_args()
+    arch = resolve_arch(
+        args.arch, peak_flops=args.peak_flops, hbm_bw=args.hbm_bw,
+        ici_bw=args.ici_bw,
+    )
     recs = json.loads(Path(args.records).read_text())
     lines = [HEADER]
     for rec in recs:
@@ -110,7 +172,7 @@ def main():
                 f"| ERROR {rec.get('error','')[:60]} | | | | | | | |"
             )
             continue
-        lines.append(fmt_row(rec))
+        lines.append(fmt_row(rec, arch))
     out = "\n".join(lines)
     print(out)
     if args.md:

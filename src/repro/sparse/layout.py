@@ -74,6 +74,7 @@ class SortedCOO(NamedTuple):
     rel_row: np.ndarray  # (nnz_padded,) row index within the target row block
     blkmap: np.ndarray  # (n_blocks,) target row-block of each nnz block
     first: np.ndarray  # (n_blocks,) 1 iff first block of its target
+    last: np.ndarray  # (n_blocks,) 1 iff last block of its target
     segments: np.ndarray  # (I_mode + 1,) row segment boundaries (sorted order)
     n_row_blocks: int
     bn: int  # nonzeros per block
@@ -99,17 +100,23 @@ class SortedCOO(NamedTuple):
 
 def build_schedule(
     rows: np.ndarray, n_rows: int, bn: int, bi: int
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, int, np.ndarray]:
+) -> Tuple[
+    np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+    int, np.ndarray,
+]:
     """Shared row-block grouping (the one implementation behind both
     ``build_mode_layout`` and ``kernels.kron_kernel.build_scatter_plan``):
     stable-sort ``rows``, group into BI-row output blocks, pad each group to
     a BN multiple so every nnz block targets exactly one row block.
 
-    Returns ``(order, valid, rel_row, blkmap, first, n_row_blocks, perm)``
-    where ``order`` holds safe gather indices (padding slots point at 0 with
-    ``valid == 0``) and ``perm`` is the plain stable sort by row (pre-padding,
-    for segment metadata). Fully vectorized: O(nnz log nnz) numpy with no
-    per-row-block interpreter loop, so 20K-row modes schedule in milliseconds.
+    Returns ``(order, valid, rel_row, blkmap, first, last, n_row_blocks,
+    perm)`` where ``order`` holds safe gather indices (padding slots point at
+    0 with ``valid == 0``), ``first``/``last`` flag each row-block group's
+    boundary blocks (the scatter kernels zero the resident block on ``first``;
+    the fused-core megakernel contracts it on ``last``), and ``perm`` is the
+    plain stable sort by row (pre-padding, for segment metadata). Fully
+    vectorized: O(nnz log nnz) numpy with no per-row-block interpreter loop,
+    so 20K-row modes schedule in milliseconds.
     """
     if bn <= 0 or bi <= 0:
         raise ValueError(f"block sizes must be positive, got bn={bn} bi={bi}")
@@ -142,6 +149,12 @@ def build_schedule(
         first = np.zeros((blkmap.shape[0],), dtype=np.int32)
         blk_start = np.concatenate([[0], np.cumsum(blocks_per_grp)[:-1]])
         first[blk_start[blocks_per_grp > 0]] = 1
+    # a group's last block sits right before the next group's first (or at
+    # the very end of the grid) — derivable from ``first``, kept explicit so
+    # the kernels never recompute group boundaries at run time.
+    last = np.empty_like(first)
+    last[:-1] = first[1:]
+    last[-1] = 1
     valid = (order >= 0).astype(np.float32)
     safe = np.where(order >= 0, order, 0)
     rel = rows[safe] % bi if nnz else np.zeros_like(safe)
@@ -152,6 +165,7 @@ def build_schedule(
         rel.astype(np.int32),
         blkmap,
         first,
+        last,
         n_row_blocks,
         perm,
     )
@@ -183,7 +197,7 @@ def build_mode_layout(
     idx = np.asarray(coo.indices)
     rows = idx[:, mode].astype(np.int64)
     n_rows = int(coo.shape[mode])
-    order, valid, rel, blkmap, first, n_row_blocks, perm = build_schedule(
+    order, valid, rel, blkmap, first, last, n_row_blocks, perm = build_schedule(
         rows, n_rows, bn, bi
     )
     # per-row segment boundaries (paper Sec. III-C: nonzeros sharing the mode
@@ -197,6 +211,7 @@ def build_mode_layout(
         rel_row=rel,
         blkmap=blkmap,
         first=first,
+        last=last,
         segments=segments.astype(np.int64),
         n_row_blocks=n_row_blocks,
         bn=bn,
@@ -234,6 +249,7 @@ class DeviceSchedule:
     rel_row: Optional[jax.Array]
     blkmap: Optional[jax.Array]
     first: Optional[jax.Array]
+    last: Optional[jax.Array]
     row_mask: Optional[jax.Array]
     kron_unique: Optional[jax.Array]
     kron_inverse: Optional[jax.Array]
@@ -248,7 +264,7 @@ class DeviceSchedule:
     def tree_flatten(self):
         children = (
             self.order, self.valid, self.rel_row, self.blkmap, self.first,
-            self.row_mask, self.kron_unique, self.kron_inverse,
+            self.last, self.row_mask, self.kron_unique, self.kron_inverse,
         )
         aux = (self.mode, self.shape, self.n_row_blocks, self.bn, self.bi,
                self.kron_modes)
@@ -268,6 +284,7 @@ class DeviceSchedule:
             rel_row=jnp.asarray(layout.rel_row),
             blkmap=jnp.asarray(layout.blkmap),
             first=jnp.asarray(layout.first),
+            last=jnp.asarray(layout.last),
             row_mask=(
                 None if layout.row_mask is None else jnp.asarray(layout.row_mask)
             ),
@@ -289,7 +306,7 @@ class DeviceSchedule:
         scatter schedule)."""
         return cls(
             order=None, valid=None, rel_row=None, blkmap=None, first=None,
-            row_mask=None,
+            last=None, row_mask=None,
             kron_unique=jnp.asarray(plan.unique_indices),
             kron_inverse=jnp.asarray(plan.inverse),
             mode=mode, shape=tuple(shape), n_row_blocks=0, bn=0, bi=0,

@@ -174,7 +174,9 @@ def engine_for_spec(
     # name is already resolved, so make_engine's own resolve is a no-op
     # (no double fallback warning) — but any future construction-time logic
     # it grows applies to plan engines too.
-    return make_engine(name, use_kron_reuse=spec.use_kron_reuse)
+    return make_engine(
+        name, use_kron_reuse=spec.use_kron_reuse, precision=spec.precision
+    )
 
 
 @dataclasses.dataclass
@@ -252,6 +254,9 @@ class TuckerPlan:
                     f"not {spec.algorithm!r} (the dense path is plain XLA)"
                 )
             self.engine = None
+        # the autotuned kernel block shapes, applied once per plan on the
+        # first sparse execution (spec.autotune on the Pallas engine only).
+        self._tuned_blocks = None
         self.stats = PlanStats()
         # executions serialize per plan: the engine's schedule caches are
         # bound to ONE tensor at a time (SweepEngine._bind), so concurrent
@@ -447,7 +452,92 @@ class TuckerPlan:
             dispatches=dispatches,
             retraces=retraces,
             schedule_builds=schedule_builds,
+            precision=(
+                self.engine.precision if self.engine is not None else "fp32"
+            ),
+            tuned_blocks=self._tuned_blocks,
         )
+
+    def _maybe_autotune(self, coo: SparseCOO) -> None:
+        """Apply the tuned kernel block shapes once per plan (spec.autotune
+        on the Pallas engine): consult the persistent tuning table keyed by
+        the problem fingerprint — a warm entry costs zero search trials —
+        and rebind the engine's block sizes/layout. Runs under the exec
+        lock (callers hold it)."""
+        if (
+            not self.spec.autotune
+            or self.engine is None
+            or self.engine.name != "pallas"
+            or self._tuned_blocks is not None
+        ):
+            return
+        from repro.kernels import autotune as _autotune
+
+        cfg = _autotune.autotune(
+            self.spec.shape, self.spec.ranks, coo.nnz,
+            dtype=str(coo.values.dtype),
+            precision=self.engine.precision,
+            interpret=self.engine.resolved_interpret(),
+        )
+        self.engine.apply_blocks(cfg)
+        self._tuned_blocks = cfg
+
+    def analyze(self, x) -> dict:
+        """Lower (without executing) this plan's compiled scan program on
+        ``x`` and parse the optimized HLO into roofline terms: matmul FLOPs,
+        approximate HBM bytes (both whole-program and per-sweep — the while
+        trip count is multiplied in by ``repro.utils.hlo``) and the achieved
+        arithmetic intensity. The bench suite records these next to its
+        timings, and CI gates on the per-sweep byte count — the megakernel's
+        acceptance criterion (fused < split) is measured exactly here."""
+        from repro.utils.hlo import analyze_hlo
+
+        spec, eng = self.spec, self.engine
+        if (
+            spec.algorithm != "sparse"
+            or spec.pipeline != "scan"
+            or spec.shard is not None
+        ):
+            raise ValueError(
+                "analyze() supports single-device sparse scan plans only"
+            )
+        coo = self._check_sparse_input(x)
+        with self._exec_lock:
+            self._maybe_autotune(coo)
+            factors = self._init_factors(None, None)
+            xnorm2 = jnp.square(coo.norm())
+            scheds = tuple(
+                eng.device_schedule(coo, m) for m in range(coo.ndim)
+            )
+            lowered = _hooi._scan_sweeps.lower(
+                coo.indices, coo.values, tuple(factors), xnorm2,
+                jnp.float32(spec.tol), scheds,
+                shape=spec.shape, ranks=spec.ranks, method=spec.method,
+                n_iter=spec.n_iter, engine_name=eng.name,
+                interpret=(
+                    eng.resolved_interpret() if eng.name == "pallas" else False
+                ),
+                use_reuse=eng.use_kron_reuse and eng.name == "xla",
+                precision=eng.precision, bl=eng.bl, bk=eng.bk,
+                fuse_core=eng.fuse_core and eng.name == "pallas",
+            )
+            text = lowered.compile().as_text()
+        s = analyze_hlo(text)
+        n = max(1, spec.n_iter)
+        return {
+            "dot_flops": s.dot_flops,
+            "dot_flops_per_sweep": s.dot_flops / n,
+            "hbm_bytes": s.io_bytes,
+            "hbm_bytes_per_sweep": s.io_bytes / n,
+            "arithmetic_intensity": s.dot_flops / max(1.0, s.io_bytes),
+            "engine": eng.name,
+            "precision": eng.precision,
+            "fuse_core": bool(eng.fuse_core and eng.name == "pallas"),
+            "tuned_blocks": (
+                dict(self._tuned_blocks._asdict())
+                if self._tuned_blocks is not None else None
+            ),
+        }
 
     # -- sparse (paper Alg. 2) ---------------------------------------------
 
@@ -463,6 +553,7 @@ class TuckerPlan:
                 "resume_from/injector require a spec with "
                 "snapshot=SnapshotSpec(...)"
             )
+        self._maybe_autotune(coo)
         factors = self._init_factors(key, factors_init)
         xnorm2 = jnp.square(coo.norm())
         if self.spec.shard is not None:
@@ -580,6 +671,8 @@ class TuckerPlan:
                     shape=spec.shape, ranks=spec.ranks, method=spec.method,
                     segment_len=segment_len, engine_name=eng.name,
                     interpret=interpret, use_reuse=use_reuse,
+                    precision=eng.precision, bl=eng.bl, bk=eng.bk,
+                    fuse_core=eng.fuse_core and eng.name == "pallas",
                 )
                 _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
                 return out
@@ -703,6 +796,10 @@ class TuckerPlan:
             engine_name=eng.name,
             interpret=eng.resolved_interpret() if eng.name == "pallas" else False,
             use_reuse=use_reuse,
+            precision=eng.precision,
+            bl=eng.bl,
+            bk=eng.bk,
+            fuse_core=eng.fuse_core and eng.name == "pallas",
         )
         _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
         hist = np.asarray(_hooi._fetch_history(hist_dev))  # the one d2h transfer

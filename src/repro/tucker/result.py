@@ -88,6 +88,12 @@ class TuckerResult(HooiResult):
         call resumed a snapshot; ``None`` on fresh runs.
       retries: segment dispatches that failed transiently and were retried
         by the ``run_with_retries`` wrapper this call ran under.
+      precision: the sweep compute precision this run executed at ('fp32'
+        or 'bf16_fp32acc' — the engine's setting, which a prebuilt engine
+        may override relative to the spec).
+      tuned_blocks: the autotuned kernel block shapes
+        (:class:`repro.kernels.autotune.BlockConfig`) the plan applied
+        before this call, or ``None`` when no autotuning ran.
     """
 
     spec: Optional["TuckerSpec"] = None
@@ -101,6 +107,8 @@ class TuckerResult(HooiResult):
     snapshots_written: int = 0
     resumed_from_sweep: Optional[int] = None
     retries: int = 0
+    precision: str = "fp32"
+    tuned_blocks: Optional[tuple] = None
 
     @property
     def n_sweeps(self) -> int:

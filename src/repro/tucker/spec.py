@@ -21,6 +21,9 @@ from repro.core.hooi import PIPELINES, effective_ranks
 METHODS = ("svd", "householder", "gram")
 ALGORITHMS = ("sparse", "dense", "complete")
 FACTOR_POLICIES = ("replicated",)
+# mirror of repro.kernels.kron_kernel.PRECISIONS (kept literal so building a
+# spec never imports the kernel stack; parity is asserted in tests).
+PRECISIONS = ("fp32", "bf16_fp32acc")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +158,15 @@ class TuckerSpec:
         recompiles.
       dtype: working precision of values/factors; "auto" follows the jax
         x64 flag (legacy behavior).
+      precision: sweep compute precision — 'fp32' (full working precision)
+        or 'bf16_fp32acc' (bf16 operand loads/multiplies in the Kron and
+        TTM kernels with f32 VMEM accumulators; the XLA engine mirrors it
+        with bf16 Kron rows + f32 scatter-add). Incompatible with shard
+        (the sharded program runs fp32).
+      autotune: search the Pallas kernel block shapes (bn/bi/bl/bk/layout)
+        for this problem at the plan's first execution, consulting the
+        persistent on-disk tuning table (``repro.kernels.autotune``) — a
+        warm table entry costs zero search. No-op on the XLA engine.
       use_kron_reuse: the paper's Sec. III-C Kronecker-row dedup on the XLA
         engine (the Pallas schedule has its own reuse layout).
       algorithm: 'sparse' (paper Alg. 2, COO input), 'dense' (Alg. 1,
@@ -182,6 +194,8 @@ class TuckerSpec:
     n_iter: int = 5
     tol: float = 0.0
     dtype: str = "auto"
+    precision: str = "fp32"
+    autotune: bool = False
     use_kron_reuse: bool = False
     algorithm: str = "sparse"
     n_rounds: int = 10
@@ -218,6 +232,16 @@ class TuckerSpec:
             raise ValueError(f"n_rounds must be >= 1, got {self.n_rounds}")
         if not (float(self.tol) >= 0.0):  # also rejects NaN
             raise ValueError(f"tol must be >= 0, got {self.tol}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, got "
+                f"{self.precision!r}"
+            )
+        if self.autotune and self.algorithm != "sparse":
+            raise ValueError(
+                "autotune requires algorithm='sparse' (only the sparse "
+                "sweep kernels have tunable block shapes)"
+            )
         if self.shard is not None:
             if not isinstance(self.shard, ShardSpec):
                 raise TypeError(
@@ -244,6 +268,12 @@ class TuckerSpec:
                     "shard is incompatible with use_kron_reuse: the dedup "
                     "plan is a per-tensor host artifact that cannot shard "
                     "along the nnz axis"
+                )
+            if self.precision != "fp32":
+                raise ValueError(
+                    "shard requires precision='fp32': the sharded program "
+                    "runs at full working precision (mixed precision is a "
+                    "kernel-engine axis)"
                 )
         if self.snapshot is not None:
             if not isinstance(self.snapshot, SnapshotSpec):
@@ -292,6 +322,7 @@ class TuckerSpec:
             and not self.use_kron_reuse
             and self.shard is None
             and self.snapshot is None
+            and self.precision == "fp32"  # batched program is fp32-only
         )
 
     def resolved_dtype(self):

@@ -199,6 +199,18 @@ def analyze_computation(comp: Computation) -> None:
         if opcode in ("fusion", "call", "custom-call"):
             for mcall in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", line):
                 comp.calls.append(mcall.group(1))
+        if opcode == "conditional":
+            # both branch forms: the indexed list and the pred true/false
+            # pair. A cond-masked scan body (the tol early-exit) puts ALL
+            # the sweep work under here — missing it zeroes the multipliers.
+            mb = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if mb:
+                for name_ in mb.group(1).split(","):
+                    comp.calls.append(name_.strip().lstrip("%"))
+            for mcall in re.finditer(
+                r"(?:true_computation|false_computation)=%?([\w\.\-]+)", line
+            ):
+                comp.calls.append(mcall.group(1))
         if opcode in _COLLECTIVES:
             # operand bytes (the data actually moved)
             ops = re.search(r"\(([^)]*)\)", line[line.index("(") :])

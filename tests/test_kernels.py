@@ -126,3 +126,79 @@ def test_ssd_kernel_matches_model_mixer():
     p = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
     y_model, _ = ssd_mixer(cfg, p, x)
     assert not bool(jnp.any(jnp.isnan(y_model)))
+
+
+# ---------------------------------------------------------------------------
+# Fused Kron→scatter→TTM megakernel (ISSUE 7): the core update G = U^T Y_(n)
+# without materializing Y_(n).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_fused_core_megakernel_vs_oracle(mode):
+    from repro.core.engine import make_engine
+
+    coo = random_sparse_tensor((24, 18, 16), 0.03, seed=5)
+    fs = [jnp.asarray(RNG.standard_normal((s, r)).astype(np.float32))
+          for s, r in zip(coo.shape, (5, 4, 3))]
+    eng = make_engine("pallas", fuse_core=True, interpret=True)
+    sched = eng.device_schedule(coo, mode)
+    got = np.asarray(ops.sparse_ttm_core_device(
+        coo.indices, coo.values, tuple(fs), mode, sched,
+        shape=coo.shape, interpret=True,
+    ))
+    y = np.asarray(ref.sparse_ttm_chain_ref(
+        coo.indices, coo.values, fs, mode, coo.shape[mode]
+    ))
+    want = np.asarray(fs[mode]).T @ y
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_fused_core_megakernel_empty_tensor():
+    from repro.core.engine import make_engine
+
+    coo = SparseCOO(jnp.zeros((0, 3), jnp.int32), jnp.zeros((0,)), (8, 6, 4))
+    fs = [jnp.asarray(RNG.standard_normal((s, 2)).astype(np.float32))
+          for s in coo.shape]
+    eng = make_engine("pallas", fuse_core=True, interpret=True)
+    sched = eng.device_schedule(coo, 2)
+    got = np.asarray(ops.sparse_ttm_core_device(
+        coo.indices, coo.values, tuple(fs), 2, sched,
+        shape=coo.shape, interpret=True,
+    ))
+    assert got.shape == (2, 4) and not got.any()
+
+
+def test_fused_core_megakernel_bf16_close_to_fp32():
+    from repro.core.engine import make_engine
+
+    coo = random_sparse_tensor((20, 16, 32), 0.04, seed=6)
+    fs = [jnp.asarray(RNG.standard_normal((s, r)).astype(np.float32))
+          for s, r in zip(coo.shape, (4, 3, 5))]
+    eng = make_engine("pallas", fuse_core=True, interpret=True)
+    sched = eng.device_schedule(coo, 2)
+    kw = dict(shape=coo.shape, interpret=True)
+    f32 = np.asarray(ops.sparse_ttm_core_device(
+        coo.indices, coo.values, tuple(fs), 2, sched, **kw))
+    b16 = np.asarray(ops.sparse_ttm_core_device(
+        coo.indices, coo.values, tuple(fs), 2, sched,
+        precision="bf16_fp32acc", **kw))
+    assert b16.dtype == np.float32  # f32 accumulators all the way out
+    np.testing.assert_allclose(b16, f32, rtol=3e-2, atol=3e-2 * np.abs(f32).max())
+
+
+def test_hooi_fuse_core_on_off_parity():
+    """Full HOOI with the fused core update matches the split path — the
+    megakernel only changes WHERE the contraction happens, not the math."""
+    from repro import tucker
+    from repro.core.engine import make_engine
+
+    coo = random_sparse_tensor((16, 12, 10), 0.05, seed=7)
+    spec = tucker.TuckerSpec(shape=coo.shape, ranks=(3, 3, 2),
+                             method="gram", n_iter=3, engine="pallas")
+    split = tucker.plan(spec, engine=make_engine("pallas", fuse_core=False))(coo)
+    fused = tucker.plan(spec, engine=make_engine("pallas", fuse_core=True))(coo)
+    np.testing.assert_allclose(np.asarray(fused.core), np.asarray(split.core),
+                               rtol=1e-5, atol=1e-5)
+    assert abs(fused.rel_error - split.rel_error) < 1e-6

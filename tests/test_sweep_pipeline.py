@@ -211,7 +211,7 @@ def _build_schedule_reference(rows, n_rows, bn, bi):
     perm = np.argsort(rows, kind="stable")
     sorted_rows = rows[perm]
     grp_bounds = np.searchsorted(sorted_rows, np.arange(0, n_row_blocks + 1) * bi)
-    order_parts, blkmap, first = [], [], []
+    order_parts, blkmap, first, last = [], [], [], []
     for g in range(n_row_blocks):
         lo, hi = int(grp_bounds[g]), int(grp_bounds[g + 1])
         if hi == lo:
@@ -223,9 +223,10 @@ def _build_schedule_reference(rows, n_rows, bn, bi):
         n_blocks = padded.size // bn
         blkmap.extend([g] * n_blocks)
         first.extend([1] + [0] * (n_blocks - 1))
+        last.extend([0] * (n_blocks - 1) + [1])
     if not order_parts:
         order_parts = [np.full((bn,), -1, dtype=np.int64)]
-        blkmap, first = [0], [1]
+        blkmap, first, last = [0], [1], [1]
     order = np.concatenate(order_parts)
     valid = (order >= 0).astype(np.float32)
     safe = np.where(order >= 0, order, 0)
@@ -233,7 +234,7 @@ def _build_schedule_reference(rows, n_rows, bn, bi):
     rel = np.where(order >= 0, rel, 0)
     return (safe.astype(np.int32), valid, rel.astype(np.int32),
             np.asarray(blkmap, dtype=np.int32), np.asarray(first, dtype=np.int32),
-            n_row_blocks)
+            np.asarray(last, dtype=np.int32), n_row_blocks)
 
 
 @pytest.mark.parametrize("case", [
@@ -248,8 +249,8 @@ def test_build_schedule_matches_reference_loop(case):
     rows = rng.integers(0, case["n_rows"], size=case["nnz"])
     got = build_schedule(rows, case["n_rows"], case["bn"], case["bi"])
     want = _build_schedule_reference(rows, case["n_rows"], case["bn"], case["bi"])
-    for g, w, name in zip(got[:6], want, ("order", "valid", "rel", "blkmap",
-                                          "first", "n_row_blocks")):
+    for g, w, name in zip(got[:7], want, ("order", "valid", "rel", "blkmap",
+                                          "first", "last", "n_row_blocks")):
         np.testing.assert_array_equal(g, w, err_msg=name)
 
 
