@@ -6,7 +6,6 @@ the dense accelerator [25]) with a margin that grows as sparsity increases.
 """
 from __future__ import annotations
 
-import numpy as np
 
 
 def run(sparsities=(1e-5, 1e-4, 1e-3), size=200, rank=16, n_iter=2) -> list:

@@ -137,6 +137,10 @@ def bench_case(
         "hbm_bytes_per_sweep": hlo["hbm_bytes_per_sweep"],
         "dot_flops_per_sweep": hlo["dot_flops_per_sweep"],
         "arithmetic_intensity": hlo["arithmetic_intensity"],
+        # program-contract lint over the same compiled program (repro.analysis)
+        # — recorded so every benchmark artifact carries its finding count,
+        # and gated to zero below.
+        "lint_findings": len(plans["scan"].lint(coo)),
     }
     return case
 
@@ -354,6 +358,15 @@ def main(argv: Optional[list] = None) -> int:
         f.write("\n")
     print(f"wrote {args.out} ({len(cases)} cases)")
 
+    dirty = [c for c in cases if c["lint_findings"]]
+    if dirty:
+        print("PROGRAM CONTRACT REGRESSION: the static linter found "
+              "violations in a benchmarked program:")
+        for c in dirty:
+            print(f"  {c['label']} {c['engine']}/{c['method']}: "
+                  f"{c['lint_findings']} finding(s) — run "
+                  f"`python -m repro.analysis --all-configs` for details")
+        return 1
     bad_retrace = [c for c in cases if c["retraces_during_timing"] != 0]
     if bad_retrace:
         print("RETRACE REGRESSION: timed calls recompiled the sweep pipeline:")

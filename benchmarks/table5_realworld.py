@@ -13,7 +13,6 @@ seconds on this laptop-class container.
 """
 from __future__ import annotations
 
-import numpy as np
 
 PAPER = {
     "amazon": dict(cpu_s=100.045, hybrid_s=86.785, dense_fpga_s=9.47e4),

@@ -1,0 +1,83 @@
+"""Static program-contract analysis for compiled Tucker pipelines.
+
+The paper's hybrid FPGA-CPU design wins on *data movement*, not FLOPs: the
+TTM/Kron hot loop never leaves the accelerator, the small QRP stays on the
+host, and one transfer per fit crosses between them. This package proves
+the reproduction keeps the equivalent contracts — statically, on the
+lowered jaxpr/optimized HLO of every compiled program — instead of
+trusting scattered point tests:
+
+  ==============  =====================================================
+  check           contract
+  ==============  =====================================================
+  transfer        no device->host transfers / host callbacks inside the
+                  compiled sweep program (fit history reads back after
+                  dispatch)
+  donation        every donated factor buffer aliases an output in the
+                  executable (no silent double-residency)
+  retrace-hazard  plan-cache key classes are frozen, hashable, NaN-safe
+                  and deeply immutable
+  precision       bf16_fp32acc keeps accumulators and outputs in f32;
+                  fp32 programs contain no bf16 at all
+  collective      sharded programs psum exactly once per mode per sweep,
+                  bytes matching ``distributed.psum_bytes_per_sweep``
+  scatter-race    Pallas scatter write-disjointness proved from the
+                  SortedCOO index maps; BlockConfig fits the VMEM budget
+  ==============  =====================================================
+
+Surfaces: ``TuckerPlan.lint()`` (structured findings for one plan),
+``python -m repro.analysis --all-configs`` (the committed config matrix +
+baseline file), and the CI ``static-analysis`` job (fails on any new
+finding).
+"""
+from repro.analysis.findings import (
+    CHECKS,
+    SEVERITIES,
+    Baseline,
+    Finding,
+    Suppression,
+)
+from repro.analysis.hlo_lints import (
+    collective_lint,
+    donation_lint,
+    precision_lint,
+    transfer_lint,
+    transfer_lint_jaxpr,
+)
+from repro.analysis.runner import (
+    Cell,
+    CellReport,
+    MatrixReport,
+    default_baseline_path,
+    default_matrix,
+    lint_plan,
+    run_matrix,
+)
+from repro.analysis.schedule_lints import (
+    scatter_race_lint,
+    scatter_race_lint_schedule,
+)
+from repro.analysis.spec_lints import retrace_hazard_lint
+
+__all__ = [
+    "CHECKS",
+    "SEVERITIES",
+    "Baseline",
+    "Cell",
+    "CellReport",
+    "Finding",
+    "MatrixReport",
+    "Suppression",
+    "collective_lint",
+    "default_baseline_path",
+    "default_matrix",
+    "donation_lint",
+    "lint_plan",
+    "precision_lint",
+    "retrace_hazard_lint",
+    "run_matrix",
+    "scatter_race_lint",
+    "scatter_race_lint_schedule",
+    "transfer_lint",
+    "transfer_lint_jaxpr",
+]

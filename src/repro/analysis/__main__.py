@@ -1,0 +1,112 @@
+"""CLI for the static program-contract linter.
+
+Usage::
+
+    python -m repro.analysis --all-configs
+    python -m repro.analysis --all-configs --baseline analysis-baseline.json
+    python -m repro.analysis --cell pallas/scan/fused --json report.json
+    python -m repro.analysis --list
+
+Exit code 0 when every cell is clean after baseline suppression, 1 on any
+remaining finding — the CI ``static-analysis`` job is exactly this command.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    from repro.analysis.findings import Baseline
+    from repro.analysis.runner import (
+        default_baseline_path,
+        default_matrix,
+        run_matrix,
+    )
+
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="statically lint the compiled Tucker program matrix",
+    )
+    p.add_argument(
+        "--all-configs", action="store_true",
+        help="sweep every cell of the default config matrix",
+    )
+    p.add_argument(
+        "--cell", action="append", default=[],
+        help="lint only the named cell(s) (repeatable; see --list)",
+    )
+    p.add_argument(
+        "--list", action="store_true", help="print the matrix cells and exit"
+    )
+    p.add_argument(
+        "--baseline", default=None,
+        help="suppression file (default: analysis-baseline.json at the "
+        "repo root, when present)",
+    )
+    p.add_argument(
+        "--no-baseline", action="store_true",
+        help="ignore the committed baseline (report every finding)",
+    )
+    p.add_argument("--json", default=None, help="write the report as JSON")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cells = default_matrix()
+    if args.list:
+        for c in cells:
+            extra = f"  (needs {c.min_devices} devices)" if c.min_devices > 1 else ""
+            print(f"{c.name}{extra}")
+        return 0
+    if args.cell:
+        by_name = {c.name: c for c in cells}
+        unknown = [n for n in args.cell if n not in by_name]
+        if unknown:
+            p.error(f"unknown cell(s) {unknown}; see --list")
+        cells = [by_name[n] for n in args.cell]
+    elif not args.all_configs:
+        p.error("pass --all-configs, --cell NAME or --list")
+
+    baseline = None
+    if not args.no_baseline:
+        path = args.baseline or default_baseline_path()
+        if os.path.exists(path):
+            baseline = Baseline.load(path)
+            print(
+                f"baseline: {path} "
+                f"({len(baseline.suppressions)} suppression(s))"
+            )
+        elif args.baseline:
+            p.error(f"baseline file not found: {args.baseline}")
+
+    report = run_matrix(cells, baseline=baseline, seed=args.seed)
+    for cell in report.cells:
+        if cell.skipped is not None:
+            print(f"SKIP {cell.name}: {cell.skipped}")
+            continue
+        sup = f" ({cell.suppressed} suppressed)" if cell.suppressed else ""
+        if cell.findings:
+            print(f"FAIL {cell.name}{sup}")
+            for f in cell.findings:
+                print(f"  {f}")
+        else:
+            print(f"ok   {cell.name}{sup}")
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report.to_json(), fh, indent=2)
+        print(f"wrote {args.json}")
+
+    n = len(report.findings)
+    if n:
+        print(f"{n} finding(s) — the program contracts do not hold")
+        return 1
+    print("all program contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,204 @@
+"""Scatter-race lint: prove write-disjointness of the Pallas scatter from
+the ``SortedCOO`` schedule's index maps, and verify the kernel's VMEM
+footprint against its BlockConfig.
+
+The fused megakernel accumulates each grid step's nonzero block into a
+resident ``(bi, K)`` row-block accumulator via one-hot matmuls — an
+order-independent sum, so the only way two writes can race is an index-map
+bug: a scheduled nonzero whose global row falls OUTSIDE its block's
+``[blkmap[b]*bi, blkmap[b]*bi + bi)`` window (cross-block clobber), a
+row-block served by two disjoint grid runs (the second run's ``first``
+zeroing erases the first run's partial sums), or first/last flags that
+miss a group boundary (stale accumulator reads). This lint re-derives all
+of those invariants from the schedule arrays with plain numpy — the same
+arrays the kernels index — so a green run IS the disjointness proof.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+
+def scatter_race_lint_schedule(
+    sched: Any, rows: np.ndarray, *, where: str = "schedule"
+) -> List[Finding]:
+    """Audit one mode's :class:`repro.sparse.layout.SortedCOO` against the
+    original mode coordinates ``rows`` (length nnz, pre-padding)."""
+    findings: List[Finding] = []
+    rows = np.asarray(rows).astype(np.int64)
+    nnz = int(rows.shape[0])
+    order = np.asarray(sched.order)
+    valid = np.asarray(sched.valid)
+    rel = np.asarray(sched.rel_row)
+    blkmap = np.asarray(sched.blkmap)
+    first = np.asarray(sched.first)
+    last = np.asarray(sched.last)
+    bn, bi = int(sched.bn), int(sched.bi)
+    n_blocks = int(blkmap.shape[0])
+
+    def err(msg: str) -> None:
+        findings.append(Finding("scatter-race", "error", where, msg))
+
+    if order.shape[0] != n_blocks * bn:
+        err(
+            f"padded schedule has {order.shape[0]} slots but the grid "
+            f"covers {n_blocks} blocks x bn={bn}"
+        )
+        return findings  # slot->block mapping is undefined past this point
+
+    vmask = valid > 0
+    scheduled = order[vmask]
+    if scheduled.shape[0] != nnz or (
+        nnz and not np.array_equal(np.sort(scheduled), np.arange(nnz))
+    ):
+        err(
+            "valid schedule slots are not a permutation of the nonzeros — "
+            "entries are dropped or double-scattered"
+        )
+        return findings
+
+    if nnz:
+        # the disjointness core: every scheduled nonzero lands inside its
+        # block's row window, at its claimed relative row.
+        blk_of_slot = np.repeat(np.arange(n_blocks), bn)
+        target = blkmap[blk_of_slot] * bi + rel
+        bad = vmask & (rows[order] != target)
+        if bad.any():
+            err(
+                f"{int(bad.sum())} scheduled nonzero(s) target a row "
+                "outside their grid block's row window — the one-hot "
+                "scatter would clobber another block's rows (write race)"
+            )
+    if (rel < 0).any() or (rel >= bi).any():
+        err(
+            "rel_row out of [0, bi) — the one-hot row index overflows the "
+            "resident accumulator block"
+        )
+    if vmask.shape[0] and (
+        (order[~vmask] != 0).any() or (rel[~vmask] != 0).any()
+    ):
+        findings.append(
+            Finding(
+                "scatter-race", "warning", where,
+                "padding slots carry non-neutral gather/row indices — "
+                "safe only while valid-masking is applied everywhere",
+            )
+        )
+
+    if (blkmap < 0).any() or (blkmap >= int(sched.n_row_blocks)).any():
+        err("blkmap targets a row block outside the unfolding")
+    expect_first = np.zeros(n_blocks, dtype=first.dtype)
+    expect_first[0] = 1
+    if n_blocks > 1:
+        expect_first[1:][blkmap[1:] != blkmap[:-1]] = 1
+    if not np.array_equal(first, expect_first):
+        err(
+            "first-flags don't mark the row-block group boundaries — the "
+            "accumulator is not zeroed on group entry (stale-read hazard)"
+        )
+    expect_last = np.empty_like(expect_first)
+    expect_last[:-1] = expect_first[1:]
+    expect_last[-1] = 1
+    if not np.array_equal(last, expect_last):
+        err(
+            "last-flags don't mark the row-block group boundaries — the "
+            "fused megakernel would contract a half-accumulated block"
+        )
+    # one contiguous grid run per row block: a revisited block's second
+    # 'first' zeroing would erase the first run's partial sums.
+    run_starts = blkmap[expect_first == 1]
+    if np.unique(run_starts).shape[0] != run_starts.shape[0]:
+        err(
+            "a row block is served by two disjoint grid runs — the second "
+            "run's zeroing erases the first run's partial sums"
+        )
+
+    n_rows = int(sched.shape[sched.mode])
+    seg = np.asarray(sched.segments)
+    if (
+        seg.shape[0] != n_rows + 1
+        or (nnz and (seg[0] != 0 or seg[-1] != nnz))
+        or (np.diff(seg) < 0).any()
+    ):
+        err("segment boundaries are not a monotone cover of the nonzeros")
+    elif nnz and not np.array_equal(
+        np.diff(seg), np.bincount(rows, minlength=n_rows)
+    ):
+        err(
+            "segment boundaries disagree with the per-row nonzero counts — "
+            "the Kron-reuse path would mix rows across segments"
+        )
+
+    visited = np.zeros(int(sched.n_row_blocks), dtype=bool)
+    in_range = blkmap[(blkmap >= 0) & (blkmap < visited.shape[0])]
+    visited[in_range] = True
+    if sched.row_mask is None:
+        if not visited.all():
+            err(
+                "row blocks receive no nnz block but the schedule has no "
+                "row mask — their stale rows leak into the factor update"
+            )
+    else:
+        expect_mask = np.repeat(visited, bi)[:n_rows]
+        if not np.array_equal(
+            np.asarray(sched.row_mask).astype(bool), expect_mask
+        ):
+            err("row mask disagrees with the visited row blocks")
+    return findings
+
+
+def scatter_race_lint(
+    engine: Any,
+    coo: Any,
+    *,
+    ranks: Sequence[int],
+    precision: str = "fp32",
+    where: str = "engine",
+) -> List[Finding]:
+    """Audit every mode schedule the Pallas engine would hand its kernels
+    for ``coo``, plus the BlockConfig-vs-VMEM-budget and engine-vs-schedule
+    block-shape agreements."""
+    from repro.kernels.autotune import (
+        DEFAULT_CONFIG,
+        VMEM_BUDGET_BYTES,
+        BlockConfig,
+        vmem_bytes,
+    )
+
+    findings: List[Finding] = []
+    idx = np.asarray(coo.indices)
+    for m in range(coo.ndim):
+        sched = engine.mode_layout(coo, m)
+        findings += scatter_race_lint_schedule(
+            sched, idx[:, m], where=f"{where}/mode{m}"
+        )
+        if (int(sched.bn), int(sched.bi)) != (int(engine.bn), int(engine.bi)):
+            findings.append(
+                Finding(
+                    "scatter-race", "error", f"{where}/mode{m}",
+                    f"schedule built with bn={sched.bn} bi={sched.bi} but "
+                    f"the engine kernels run bn={engine.bn} bi={engine.bi} "
+                    "— grid/index maps disagree with the kernel blocks",
+                )
+            )
+    cfg = BlockConfig(
+        bl=int(engine.bl or DEFAULT_CONFIG.bl),
+        bk=int(engine.bk or DEFAULT_CONFIG.bk),
+        bn=int(engine.bn),
+        bi=int(engine.bi),
+        layout="fused" if engine.fuse_core else "split",
+    )
+    need = vmem_bytes(cfg, coo.shape, tuple(ranks), precision)
+    if need > VMEM_BUDGET_BYTES:
+        findings.append(
+            Finding(
+                "scatter-race", "error", f"{where}/vmem",
+                f"BlockConfig {tuple(cfg)} needs {need} bytes of VMEM, "
+                f"over the {VMEM_BUDGET_BYTES}-byte budget — the grid "
+                "step's resident blocks don't fit",
+            )
+        )
+    return findings

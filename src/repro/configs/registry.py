@@ -1,7 +1,7 @@
 """Architecture registry: --arch <id> resolution for every launcher."""
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import List
 
 from repro.configs.base import ModelConfig, SHAPES, ShapeConfig, shape_applicable
 from repro.configs import (

@@ -6,7 +6,6 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.coo import SparseCOO
 from repro.core.kron import kron_rows
 from repro.core.ttm import ttm_chain
 

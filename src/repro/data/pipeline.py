@@ -12,9 +12,8 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig

@@ -6,8 +6,7 @@ sites compile to Mosaic.
 """
 from __future__ import annotations
 
-import functools
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

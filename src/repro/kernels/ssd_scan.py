@@ -23,7 +23,6 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _ssd_kernel(x_ref, acum_ref, b_ref, c_ref, y_ref, s_ref):

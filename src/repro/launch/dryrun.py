@@ -27,14 +27,13 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config, shape_applicable
 from repro.configs.registry import ASSIGNED_ARCHS
 from repro.launch.inputs import input_specs
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as model_lib
-from repro.models.sharding import DEFAULT_RULES, RULES_SERVE, RULES_TRAIN, ShardingRules
+from repro.models.sharding import RULES_SERVE, RULES_TRAIN, ShardingRules
 from repro.train.step import make_train_step, train_state_specs
 from repro.utils import hlo as hlo_lib
 

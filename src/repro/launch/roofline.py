@@ -29,7 +29,7 @@ import argparse
 import dataclasses
 import json
 from pathlib import Path
-from typing import Dict, List
+from typing import Dict
 
 
 @dataclasses.dataclass(frozen=True)

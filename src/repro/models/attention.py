@@ -14,7 +14,7 @@ chunked prefill and single-token decode (s == 1) with one code path.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ count for per-device. bf16 activations/weights, f32 optimizer state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
 

@@ -1,11 +1,9 @@
 """Common NN layers (pure JAX; no flax)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:

@@ -9,20 +9,18 @@ logical axes through the sharding rules for the given mesh.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.utils import compat
 from repro.models import transformer as tfm
 from repro.models.layers import pack_bf16, rmsnorm, softmax_cross_entropy, unpack_bf16
-from repro.models.mamba2 import SsmState
-from repro.models.sharding import ShardingRules, constrain, named_sharding, spec_for
+from repro.models.sharding import ShardingRules, constrain, spec_for
 
 
 @dataclasses.dataclass(frozen=True)

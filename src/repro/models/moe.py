@@ -16,7 +16,6 @@ cost of duplicating that token's dispatch bytes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

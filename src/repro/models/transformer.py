@@ -15,7 +15,7 @@ Baseline partitioning (see DESIGN.md §6):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

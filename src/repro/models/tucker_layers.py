@@ -14,11 +14,10 @@ model feature (DESIGN.md §4).
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.tucker import decompose
 from repro.core.reconstruct import compression_ratio

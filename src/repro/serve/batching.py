@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict, deque
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Deque, Optional, Tuple
 
 from repro.tucker.spec import TuckerSpec
 
@@ -56,7 +56,7 @@ class MicroBatcher:
     never read from a clock, so flush decisions are exactly reproducible.
     """
 
-    def __init__(self, max_batch: int, max_wait_s: float):
+    def __init__(self, max_batch: int, max_wait_s: float) -> None:
         if int(max_batch) < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if not float(max_wait_s) >= 0.0:  # also rejects NaN

@@ -9,7 +9,7 @@ the decode_32k / long_500k cells.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,20 +32,20 @@ class Engine:
         self,
         cfg: ModelConfig,
         mesh: jax.sharding.Mesh,
-        params,
+        params: Any,
         scfg: ServeConfig = ServeConfig(),
         rules: ShardingRules = DEFAULT_RULES,
-    ):
+    ) -> None:
         self.cfg, self.mesh, self.scfg = cfg, mesh, scfg
         self.params = params
         self.prefill = jax.jit(model_lib.make_prefill_step(cfg, mesh, rules))
         self.decode = jax.jit(model_lib.make_serve_step(cfg, mesh, rules))
 
-    def _pad_cache(self, cache, from_len: int):
+    def _pad_cache(self, cache: Any, from_len: int) -> Any:
         """Grow the prefill cache's kvseq dim to the serving budget."""
         target = self.scfg.max_seq_len
 
-        def pad(a):
+        def pad(a: Any) -> Any:
             # attention cache leaves: (..., S, kv, hd); ssm states untouched.
             if a.ndim >= 3 and a.shape[-3] == from_len and a.dtype == jnp.uint16:
                 pad_width = [(0, 0)] * a.ndim

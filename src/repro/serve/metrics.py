@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import threading
 from collections import Counter, deque
-from typing import Deque, Dict, Optional, Sequence
+from typing import Deque, Dict, Sequence
 
 import numpy as np
 
@@ -23,7 +23,7 @@ class LatencyTracker:
     about the *recent* distribution, and a hard bound keeps a long-lived
     process from growing an unbounded sample list."""
 
-    def __init__(self, maxlen: int = 8192):
+    def __init__(self, maxlen: int = 8192) -> None:
         self._samples: Deque[float] = deque(maxlen=maxlen)
         self.count = 0  # lifetime observations (reservoir may hold fewer)
 
@@ -65,7 +65,7 @@ class ServiceMetrics:
       * latency summaries for queue wait, batched execute, and end-to-end.
     """
 
-    def __init__(self, latency_window: int = 8192):
+    def __init__(self, latency_window: int = 8192) -> None:
         self._lock = threading.Lock()
         self.submitted = 0
         self.completed = 0

@@ -29,7 +29,7 @@ import dataclasses
 import threading
 import time
 import warnings
-from typing import List, Optional, Sequence, Set
+from typing import Any, List, Optional, Sequence, Set
 
 from repro.core.coo import SparseCOO
 from repro.serve.batching import BatchKey, Flush, MicroBatcher
@@ -138,7 +138,7 @@ class TuckerTicket:
     queued (a flush takes its whole batch), so the Future cancel/running
     state machine would be dead API surface here."""
 
-    def __init__(self):
+    def __init__(self) -> None:
         self._done = threading.Event()
         self._result: Optional[TuckerResult] = None
         self._exception: Optional[BaseException] = None
@@ -187,7 +187,7 @@ class TuckerService:
     any number of threads may ``submit`` concurrently.
     """
 
-    def __init__(self, config: Optional[ServiceConfig] = None):
+    def __init__(self, config: Optional[ServiceConfig] = None) -> None:
         self.config = config or ServiceConfig()
         self.metrics = ServiceMetrics(latency_window=self.config.latency_window)
         self._lock = threading.Lock()
@@ -218,11 +218,11 @@ class TuckerService:
 
     def submit(
         self,
-        indices,
-        values,
+        indices: Any,
+        values: Any,
         spec: TuckerSpec,
         *,
-        key=None,
+        key: Any = None,
     ) -> TuckerTicket:
         """Enqueue one decomposition of the COO tensor (``indices``,
         ``values``, shape = ``spec.shape``); returns immediately with a
@@ -232,7 +232,7 @@ class TuckerService:
         return self.submit_coo(coo, spec, key=key)
 
     def submit_coo(
-        self, coo: SparseCOO, spec: TuckerSpec, *, key=None
+        self, coo: SparseCOO, spec: TuckerSpec, *, key: Any = None
     ) -> TuckerTicket:
         """`submit` for callers who already hold a ``SparseCOO``."""
         if spec.algorithm != "sparse":
@@ -313,7 +313,7 @@ class TuckerService:
         coos: Sequence[SparseCOO],
         spec: TuckerSpec,
         *,
-        keys=None,
+        keys: Any = None,
         timeout: Optional[float] = None,
     ) -> List[TuckerResult]:
         """Convenience: submit many tensors, block for all results (in
@@ -442,7 +442,7 @@ class TuckerService:
                 batch.key.bucket if (vmappable or shard is not None) else None
             )
 
-            def dispatch():
+            def dispatch() -> Any:
                 return plan.batch(
                     [it.coo for it in items],
                     keys=[it.key for it in items],
@@ -512,5 +512,5 @@ class TuckerService:
 
     # -- plan-cache eviction observation ------------------------------------
 
-    def _on_plan_evicted(self, key, plan) -> None:
+    def _on_plan_evicted(self, key: Any, plan: Any) -> None:
         self.metrics.on_plan_eviction()

@@ -12,7 +12,7 @@ synthetic 130x150 vessel-like image at the paper's 0.18 density.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Sequence, Tuple
+from typing import Callable, Dict, Tuple
 
 import numpy as np
 

@@ -6,7 +6,7 @@ densifying, so the same generators scale to the 20K^3 Amazon shape.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

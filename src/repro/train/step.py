@@ -1,7 +1,6 @@
 """Train-step factory: loss -> grads -> AdamW, fully jittable."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,7 @@ import dataclasses
 import threading
 import warnings
 from collections import OrderedDict
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +51,7 @@ __all__ = [
 ]
 
 
-def mesh_for_shard(shard) -> "jax.sharding.Mesh":
+def mesh_for_shard(shard: Any) -> "jax.sharding.Mesh":
     """The 1-axis nnz mesh a :class:`~repro.tucker.spec.ShardSpec` executes
     on: ``shard.num_devices`` devices named ``shard.axis``. Deterministic
     (same spec on the same host -> the same mesh), so the plan cache can key
@@ -71,7 +71,7 @@ def mesh_for_shard(shard) -> "jax.sharding.Mesh":
     return make_mesh((shard.num_devices,), (shard.axis,))
 
 
-def mesh_fingerprint(mesh) -> str:
+def mesh_fingerprint(mesh: Any) -> str:
     """Stable identity of a mesh for the plan-cache key: platform + device
     ids (in mesh order) + axis layout. Two plans over identical meshes share
     one compiled program; a changed device set or axis layout is a new key,
@@ -100,7 +100,7 @@ def _default_np_key() -> np.ndarray:
     return _DEFAULT_NP_KEY
 
 
-def _is_typed_key(k) -> bool:
+def _is_typed_key(k: Any) -> bool:
     """New-style typed PRNG key (``jax.random.key``), whose dtype carries the
     impl — unlike raw uint32 keys, it cannot round-trip through numpy."""
     return (
@@ -110,12 +110,12 @@ def _is_typed_key(k) -> bool:
     )
 
 
-def _np_key(k) -> np.ndarray:
+def _np_key(k: Any) -> np.ndarray:
     """Host view of one raw (uint32) PRNG key; ``None`` is the default key."""
     return _default_np_key() if k is None else np.asarray(k)
 
 
-def _key_vmappable(k) -> bool:
+def _key_vmappable(k: Any) -> bool:
     """Whether this PRNG key reproduces the per-tensor init inside the
     vmapped batched program. Raw/None keys and typed threefry keys do;
     other impls (e.g. rbg) generate DIFFERENT streams under vmap than
@@ -124,7 +124,7 @@ def _key_vmappable(k) -> bool:
     return not _is_typed_key(k) or str(k.dtype) == "key<fry>"
 
 
-def _stack_keys(keys) -> jax.Array:
+def _stack_keys(keys: Any) -> jax.Array:
     """One key array for the batched program. All-raw/None keys assemble
     host-side (zero eager dispatches — the hot serving path); typed
     threefry keys are unwrapped to their raw uint32 data, which IS a legacy
@@ -206,8 +206,8 @@ class TuckerPlan:
         spec: TuckerSpec,
         engine: Optional[SweepEngine] = None,
         _resolved: Optional[str] = None,
-        _mesh=None,
-    ):
+        _mesh: Any = None,
+    ) -> None:
         self.spec = spec
         if spec.shard is not None:
             # the sharded pipeline is plain XLA inside shard_map: force the
@@ -288,7 +288,7 @@ class TuckerPlan:
             and not self.engine.use_kron_reuse
         )
 
-    def batch_is_vmappable(self, keys=None) -> bool:
+    def batch_is_vmappable(self, keys: Any = None) -> bool:
         """Whether :meth:`batch` with these keys runs as ONE vmapped
         dispatch — the plan-level property AND every key reproducible under
         vmap. The serving plane keys its padding decisions and metrics off
@@ -299,9 +299,9 @@ class TuckerPlan:
 
     # -- public execution surface -----------------------------------------
 
-    def __call__(self, x, key=None, factors_init=None,
+    def __call__(self, x: Any, key: Any = None, factors_init: Any = None,
                  pad_nnz_to: Optional[int] = None,
-                 resume_from=None, injector=None) -> TuckerResult:
+                 resume_from: Any = None, injector: Any = None) -> TuckerResult:
         """Run the planned decomposition on one tensor of the spec's shape.
         Thread-safe: concurrent calls on one plan serialize.
 
@@ -339,7 +339,7 @@ class TuckerPlan:
     def batch(
         self,
         coos: Sequence[SparseCOO],
-        keys=None,
+        keys: Any = None,
         pad_nnz_to: Optional[int] = None,
     ) -> List[TuckerResult]:
         """Decompose k same-shape sparse tensors as ONE batched dispatch.
@@ -407,7 +407,7 @@ class TuckerPlan:
 
     # -- input validation ---------------------------------------------------
 
-    def _check_sparse_input(self, coo) -> SparseCOO:
+    def _check_sparse_input(self, coo: Any) -> SparseCOO:
         if not isinstance(coo, SparseCOO):
             raise TypeError(
                 f"algorithm={self.spec.algorithm!r} expects a SparseCOO input, "
@@ -423,7 +423,7 @@ class TuckerPlan:
             coo = SparseCOO(coo.indices, coo.values.astype(dt), coo.shape)
         return coo
 
-    def _init_factors(self, key, factors_init):
+    def _init_factors(self, key: Any, factors_init: Any) -> Any:
         if factors_init is not None:
             # copy: the compiled scan pipeline donates its factor buffers, and
             # donating the caller's arrays would delete them out from under a
@@ -439,8 +439,9 @@ class TuckerPlan:
 
         return compression_ratio(self.spec.shape, self.spec.ranks)
 
-    def _result(self, core, factors, hist, engine, dispatches, retraces,
-                schedule_builds) -> TuckerResult:
+    def _result(self, core: Any, factors: Any, hist: Any, engine: Any,
+                dispatches: int, retraces: int,
+                schedule_builds: int) -> TuckerResult:
         self.stats.dispatches += dispatches
         self.stats.retraces += retraces
         self.stats.schedule_builds += schedule_builds
@@ -482,49 +483,131 @@ class TuckerPlan:
         self.engine.apply_blocks(cfg)
         self._tuned_blocks = cfg
 
-    def analyze(self, x) -> dict:
-        """Lower (without executing) this plan's compiled scan program on
-        ``x`` and parse the optimized HLO into roofline terms: matmul FLOPs,
-        approximate HBM bytes (both whole-program and per-sweep — the while
-        trip count is multiplied in by ``repro.utils.hlo``) and the achieved
-        arithmetic intensity. The bench suite records these next to its
-        timings, and CI gates on the per-sweep byte count — the megakernel's
-        acceptance criterion (fused < split) is measured exactly here."""
-        from repro.utils.hlo import analyze_hlo
+    def lower_hlo(self, x: Any) -> Tuple[str, dict]:
+        """Lower (without executing) this plan's compiled program on ``x``
+        and return ``(optimized HLO text, program metadata)``.
 
+        Covers every compiled sparse pipeline — the single-device scan, the
+        snapshot segment program, and the sharded (plain and resumable)
+        shard_map programs — so :meth:`analyze` and :meth:`lint` see the
+        SAME executable the execution paths dispatch. The metadata names the
+        program kind, how many sweeps one dispatch traces, which flat input
+        parameters were donated, and the working precision — everything the
+        ``repro.analysis`` contract linters key on.
+        """
         spec, eng = self.spec, self.engine
-        if (
-            spec.algorithm != "sparse"
-            or spec.pipeline != "scan"
-            or spec.shard is not None
-        ):
+        if spec.algorithm != "sparse":
+            raise ValueError("lower_hlo() supports sparse plans only")
+        if spec.pipeline != "scan":
             raise ValueError(
-                "analyze() supports single-device sparse scan plans only"
+                "only pipeline='scan' plans compile one program; the "
+                "'python' pipeline dispatches per sweep — there is no "
+                "single compiled program to lower"
             )
         coo = self._check_sparse_input(x)
+        ndim = coo.ndim
+        work_dtype = jnp.promote_types(coo.values.dtype, jnp.float32)
         with self._exec_lock:
             self._maybe_autotune(coo)
             factors = self._init_factors(None, None)
             xnorm2 = jnp.square(coo.norm())
-            scheds = tuple(
-                eng.device_schedule(coo, m) for m in range(coo.ndim)
-            )
-            lowered = _hooi._scan_sweeps.lower(
-                coo.indices, coo.values, tuple(factors), xnorm2,
-                jnp.float32(spec.tol), scheds,
-                shape=spec.shape, ranks=spec.ranks, method=spec.method,
-                n_iter=spec.n_iter, engine_name=eng.name,
-                interpret=(
-                    eng.resolved_interpret() if eng.name == "pallas" else False
-                ),
-                use_reuse=eng.use_kron_reuse and eng.name == "xla",
-                precision=eng.precision, bl=eng.bl, bk=eng.bk,
-                fuse_core=eng.fuse_core and eng.name == "pallas",
-            )
+            tol = jnp.float32(spec.tol)
+            if spec.shard is not None:
+                sched = eng.shard_schedule(coo, self.mesh, self._nnz_axes)
+                if spec.snapshot is not None:
+                    seg = spec.snapshot.every_n_sweeps
+                    prog = _hooi.build_sharded_program(
+                        self.mesh, self._nnz_axes,
+                        shape=spec.shape, ranks=spec.ranks,
+                        method=spec.method, n_iter=seg, resumable=True,
+                    )
+                    core = jnp.zeros(tuple(spec.ranks), dtype=work_dtype)
+                    lowered = prog.lower(
+                        sched.indices, sched.values, tuple(factors), core,
+                        xnorm2, tol, jnp.float32(jnp.inf),
+                        jnp.asarray(False), jnp.int32(0),
+                        jnp.int32(spec.n_iter),
+                    )
+                    # factors NOT donated: the host spills the carry to a
+                    # checkpoint right after each segment dispatch.
+                    kind, n_sweeps, donated = "sharded-segment", seg, ()
+                else:
+                    prog = _hooi.build_sharded_program(
+                        self.mesh, self._nnz_axes,
+                        shape=spec.shape, ranks=spec.ranks,
+                        method=spec.method, n_iter=spec.n_iter,
+                    )
+                    lowered = prog.lower(
+                        sched.indices, sched.values, tuple(factors),
+                        xnorm2, tol,
+                    )
+                    kind, n_sweeps = "sharded", spec.n_iter
+                    # donate_argnums=(2,): the factors tuple flattens to
+                    # parameters 2 .. 2+ndim-1 of the entry computation.
+                    donated = tuple(range(2, 2 + ndim))
+            else:
+                scheds = tuple(
+                    eng.device_schedule(coo, m) for m in range(ndim)
+                )
+                common = dict(
+                    shape=spec.shape, ranks=spec.ranks, method=spec.method,
+                    engine_name=eng.name,
+                    interpret=(
+                        eng.resolved_interpret() if eng.name == "pallas"
+                        else False
+                    ),
+                    use_reuse=eng.use_kron_reuse and eng.name == "xla",
+                    precision=eng.precision, bl=eng.bl, bk=eng.bk,
+                    fuse_core=eng.fuse_core and eng.name == "pallas",
+                )
+                if spec.snapshot is not None:
+                    seg = spec.snapshot.every_n_sweeps
+                    core = jnp.zeros(tuple(spec.ranks), dtype=work_dtype)
+                    lowered = _hooi._segment_scan_sweeps.lower(
+                        coo.indices, coo.values, tuple(factors), core,
+                        xnorm2, tol, jnp.float32(jnp.inf),
+                        jnp.asarray(False), jnp.int32(0),
+                        jnp.int32(spec.n_iter), scheds,
+                        segment_len=seg, **common,
+                    )
+                    kind, n_sweeps, donated = "segment", seg, ()
+                else:
+                    lowered = _hooi._scan_sweeps.lower(
+                        coo.indices, coo.values, tuple(factors), xnorm2,
+                        tol, scheds, n_iter=spec.n_iter, **common,
+                    )
+                    kind, n_sweeps = "scan", spec.n_iter
+                    # donate_argnames=("factors",): parameters 2..2+ndim-1.
+                    donated = tuple(range(2, 2 + ndim))
             text = lowered.compile().as_text()
+        meta = {
+            "kind": kind,
+            "ndim": ndim,
+            "n_sweeps": n_sweeps,
+            "donated_params": donated,
+            "precision": eng.precision,
+            "sharded": spec.shard is not None,
+            "engine": eng.name,
+            "working_dtype": str(jnp.dtype(work_dtype)),
+        }
+        return text, meta
+
+    def analyze(self, x: Any) -> dict:
+        """Lower (without executing) this plan's compiled program on ``x``
+        and parse the optimized HLO into roofline terms: matmul FLOPs,
+        approximate HBM bytes (both whole-program and per-sweep — while
+        trip counts are multiplied in by ``repro.utils.hlo``) and the
+        achieved arithmetic intensity; sharded programs additionally report
+        collective bytes. The bench suite records these next to its
+        timings, and CI gates on the per-sweep byte count — the megakernel's
+        acceptance criterion (fused < split) is measured exactly here."""
+        from repro.utils.hlo import analyze_hlo
+
+        eng = self.engine
+        text, meta = self.lower_hlo(x)
         s = analyze_hlo(text)
-        n = max(1, spec.n_iter)
-        return {
+        n = max(1, meta["n_sweeps"])
+        out = {
             "dot_flops": s.dot_flops,
             "dot_flops_per_sweep": s.dot_flops / n,
             "hbm_bytes": s.io_bytes,
@@ -533,17 +616,35 @@ class TuckerPlan:
             "engine": eng.name,
             "precision": eng.precision,
             "fuse_core": bool(eng.fuse_core and eng.name == "pallas"),
+            "program": meta["kind"],
+            "n_sweeps_traced": meta["n_sweeps"],
             "tuned_blocks": (
                 dict(self._tuned_blocks._asdict())
                 if self._tuned_blocks is not None else None
             ),
         }
+        if meta["sharded"]:
+            out["collective_bytes"] = s.total_coll_bytes
+            out["collective_bytes_per_sweep"] = s.total_coll_bytes / n
+        return out
+
+    def lint(self, x: Any, baseline: Any = None) -> list:
+        """Run the ``repro.analysis`` program-contract linters on this
+        plan's compiled program (transfer/donation/precision/collective on
+        the optimized HLO, scatter-race on the Pallas schedules, retrace
+        hazards on the spec) and return the list of structured
+        :class:`repro.analysis.Finding` — empty when every contract holds.
+        ``baseline`` (a :class:`repro.analysis.Baseline`) filters findings
+        through the committed suppression file."""
+        from repro import analysis
+
+        return analysis.lint_plan(self, x, baseline=baseline)
 
     # -- sparse (paper Alg. 2) ---------------------------------------------
 
-    def _run_sparse(self, coo: SparseCOO, key, factors_init,
+    def _run_sparse(self, coo: SparseCOO, key: Any, factors_init: Any,
                     pad_nnz_to: Optional[int] = None,
-                    resume_from=None, injector=None) -> TuckerResult:
+                    resume_from: Any = None, injector: Any = None) -> TuckerResult:
         if self.spec.snapshot is not None:
             return self._run_sparse_snapshot(
                 coo, key, factors_init, pad_nnz_to, resume_from, injector
@@ -564,8 +665,9 @@ class TuckerPlan:
             return self._run_sparse_scan(coo, factors, xnorm2)
         return self._run_sparse_python(coo, factors, xnorm2)
 
-    def _run_sparse_snapshot(self, coo, key, factors_init, pad_nnz_to,
-                             resume_from, injector) -> TuckerResult:
+    def _run_sparse_snapshot(self, coo: Any, key: Any, factors_init: Any,
+                             pad_nnz_to: Any, resume_from: Any,
+                             injector: Any) -> TuckerResult:
         """The fault-tolerant segment loop: the job's ``n_iter`` sweeps run
         as segments of ``snapshot.every_n_sweeps`` through the SAME scan
         skeleton as the uninterrupted pipelines (bit-identical per-sweep
@@ -615,7 +717,7 @@ class TuckerPlan:
                       retry_backoff_s=snap.retry_backoff_s)
         retries = 0
 
-        def on_retry(attempt, exc):
+        def on_retry(attempt: int, exc: BaseException) -> None:
             nonlocal retries
             retries += 1
 
@@ -645,7 +747,7 @@ class TuckerPlan:
                     n_iter=segment_len, resumable=True,
                 )
 
-            def dispatch():
+            def dispatch() -> Any:
                 out = self._sharded_segment_program(
                     sched.indices, sched.values, tuple(factors), core,
                     xnorm2, tol, prev_err_d, done_d, n_done_d, total_sweeps,
@@ -663,7 +765,7 @@ class TuckerPlan:
                 eng.resolved_interpret() if eng.name == "pallas" else False
             )
 
-            def dispatch():
+            def dispatch() -> Any:
                 out = _hooi._segment_scan_sweeps(
                     coo.indices, coo.values, tuple(factors), core,
                     xnorm2, tol, prev_err_d, done_d, n_done_d, total_sweeps,
@@ -677,7 +779,7 @@ class TuckerPlan:
                 _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
                 return out
 
-        def save(step):
+        def save(step: Any) -> None:
             nonlocal snapshots_written
             _snap.save_snapshot(
                 mgr, spec, factors=factors, core=core, prev_err=prev_err,
@@ -691,7 +793,7 @@ class TuckerPlan:
 
         while n_done < spec.n_iter and not done:
 
-            def step():
+            def step() -> Any:
                 if injector is not None:
                     # consulted inside the retry wrapper: a transient
                     # injected failure retries in place (the injector is
@@ -735,7 +837,7 @@ class TuckerPlan:
             res.shard_imbalance = sched.imbalance
         return res
 
-    def _run_sparse_sharded(self, coo, factors, xnorm2,
+    def _run_sparse_sharded(self, coo: Any, factors: Any, xnorm2: Any,
                             pad_nnz_to: Optional[int] = None) -> TuckerResult:
         """One shard_map-wrapped scan dispatch over the plan's mesh: nonzeros
         sharded (device_put once, via the engine's ShardSchedule cache),
@@ -776,7 +878,7 @@ class TuckerPlan:
         res.shard_imbalance = sched.imbalance
         return res
 
-    def _run_sparse_scan(self, coo, factors, xnorm2) -> TuckerResult:
+    def _run_sparse_scan(self, coo: Any, factors: Any, xnorm2: Any) -> TuckerResult:
         spec, eng = self.spec, self.engine
         use_reuse = eng.use_kron_reuse and eng.name == "xla"
         builds0 = eng.schedule_builds
@@ -812,7 +914,7 @@ class TuckerPlan:
             schedule_builds=eng.schedule_builds - builds0,
         )
 
-    def _run_sparse_python(self, coo, factors, xnorm2) -> TuckerResult:
+    def _run_sparse_python(self, coo: Any, factors: Any, xnorm2: Any) -> TuckerResult:
         """The legacy per-sweep driver (benchmark baseline): one dispatch and
         one blocking host sync per sweep, same math as the scan pipeline."""
         spec, eng = self.spec, self.engine
@@ -847,7 +949,8 @@ class TuckerPlan:
             schedule_builds=eng.schedule_builds - builds0,
         )
 
-    def _run_sparse_vmapped(self, coos, keys, pad_nnz_to=None) -> List[TuckerResult]:
+    def _run_sparse_vmapped(self, coos: Any, keys: Any,
+                            pad_nnz_to: Any = None) -> List[TuckerResult]:
         spec = self.spec
         idx, val = pad_coo_batch(coos, target_nnz=pad_nnz_to)
         jkeys = _stack_keys(keys)
@@ -881,7 +984,7 @@ class TuckerPlan:
 
     # -- dense (paper Alg. 1) ----------------------------------------------
 
-    def _run_dense(self, x, key, factors_init) -> TuckerResult:
+    def _run_dense(self, x: Any, key: Any, factors_init: Any) -> TuckerResult:
         from repro.core.coo import fold_dense, unfold_dense
         from repro.core.qrp import factor_update
         from repro.core.ttm import ttm_chain
@@ -928,7 +1031,8 @@ class TuckerPlan:
 
     # -- completion (EM over the dense runner) -------------------------------
 
-    def _run_complete(self, coo: SparseCOO, key, factors_init=None) -> TuckerResult:
+    def _run_complete(self, coo: SparseCOO, key: Any,
+                      factors_init: Any = None) -> TuckerResult:
         """EM-style Tucker completion (paper use cases: MRI reconstruction
         [27], process-variation prediction [15]): alternate dense HOOI with
         imputation of the missing entries from the current reconstruction.
@@ -977,7 +1081,7 @@ class PlanCache:
     cache.
     """
 
-    def __init__(self, capacity: Optional[int] = None):
+    def __init__(self, capacity: Optional[int] = None) -> None:
         self._lock = threading.RLock()
         self._entries: "OrderedDict[PlanCacheKey, TuckerPlan]" = OrderedDict()
         self._capacity = capacity
@@ -1090,7 +1194,7 @@ _PLAN_CACHE = PlanCache()
 
 
 def plan(spec: TuckerSpec, *, engine: Optional[SweepEngine] = None,
-         mesh=None) -> TuckerPlan:
+         mesh: Any = None) -> TuckerPlan:
     """Build (or fetch the cached) :class:`TuckerPlan` for ``spec``.
 
     Plans are cached per (spec, resolved engine), so every caller asking for
@@ -1154,8 +1258,9 @@ def add_plan_eviction_hook(hook: EvictionHook) -> Callable[[], None]:
     return _PLAN_CACHE.add_eviction_hook(hook)
 
 
-def resume(spec: TuckerSpec, x, directory: Optional[str] = None, *,
-           key=None, mesh=None, injector=None) -> TuckerResult:
+def resume(spec: TuckerSpec, x: Any, directory: Optional[str] = None, *,
+           key: Any = None, mesh: Any = None,
+           injector: Any = None) -> TuckerResult:
     """Restart a snapshotted decomposition from its latest checkpoint.
 
     Loads the newest snapshot in ``directory`` (default: the spec's own
@@ -1203,8 +1308,8 @@ def resume(spec: TuckerSpec, x, directory: Optional[str] = None, *,
     return p(x, key=key, resume_from=state, injector=injector)
 
 
-def decompose(x, ranks: Sequence[int], *, key=None, factors_init=None,
-              **spec_kwargs) -> TuckerResult:
+def decompose(x: Any, ranks: Sequence[int], *, key: Any = None,
+              factors_init: Any = None, **spec_kwargs: Any) -> TuckerResult:
     """One-shot convenience: infer the spec from ``x``, plan (cached), run.
 
     ``spec_kwargs`` are :class:`TuckerSpec` fields (method, engine, pipeline,

@@ -19,7 +19,7 @@ fingerprinted plan cache + a rebuilt ShardSchedule), the state never has to.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +67,7 @@ class SnapshotState:
     step: int
 
 
-def _spec_meta(spec) -> Dict:
+def _spec_meta(spec: Any) -> Dict:
     """The spec fields a resume must agree on (plus context worth keeping)."""
     return {
         "shape": list(spec.shape),
@@ -85,14 +85,14 @@ def _spec_meta(spec) -> Dict:
 
 def save_snapshot(
     mgr: CheckpointManager,
-    spec,
+    spec: Any,
     *,
-    factors,
-    core,
-    prev_err,
-    done,
+    factors: Any,
+    core: Any,
+    prev_err: Any,
+    done: Any,
     sweeps_done: int,
-    fit_history,
+    fit_history: Any,
     mesh_fp: Optional[str] = None,
 ) -> str:
     """Write one snapshot at checkpoint step ``sweeps_done``. The array
@@ -130,7 +130,7 @@ def load_snapshot(directory: str, step: Optional[int] = None) -> SnapshotState:
         )
     by_name = {l["name"]: l for l in manifest["leaves"]}
 
-    def sds(name):
+    def sds(name: str) -> Any:
         leaf = by_name[name]
         return jax.ShapeDtypeStruct(
             tuple(leaf["shape"]), jnp.dtype(leaf["dtype"])
@@ -156,7 +156,7 @@ def load_snapshot(directory: str, step: Optional[int] = None) -> SnapshotState:
     )
 
 
-def check_compatible(spec, state: SnapshotState) -> None:
+def check_compatible(spec: Any, state: SnapshotState) -> None:
     """A resume must describe the same *problem* the snapshot came from:
     shape/ranks/method/algorithm are structural (the carry's shapes and the
     per-sweep math depend on them). Everything else may legitimately change

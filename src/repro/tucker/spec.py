@@ -11,7 +11,7 @@ retraces.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -53,7 +53,7 @@ class ShardSpec:
     axis: str = "nnz"
     factor_policy: str = "replicated"
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if int(self.num_devices) < 1:
             raise ValueError(
                 f"num_devices must be >= 1, got {self.num_devices}"
@@ -101,7 +101,7 @@ class SnapshotSpec:
     max_retries: int = 0
     retry_backoff_s: float = 0.05
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if int(self.every_n_sweeps) < 1:
             raise ValueError(
                 f"every_n_sweeps must be >= 1, got {self.every_n_sweeps}"
@@ -128,7 +128,7 @@ class SnapshotSpec:
         )
 
 
-def _canonical_dtype(dtype) -> str:
+def _canonical_dtype(dtype: Any) -> str:
     """Normalize a dtype spec to a canonical string ("auto" = follow the
     jax x64 flag at execution time, the legacy drivers' behavior)."""
     if dtype is None or dtype == "auto":
@@ -202,7 +202,7 @@ class TuckerSpec:
     shard: Optional[ShardSpec] = None
     snapshot: Optional[SnapshotSpec] = None
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         shape = tuple(int(s) for s in self.shape)
         if not shape or any(s < 1 for s in shape):
             raise ValueError(f"shape must be positive, got {self.shape}")
@@ -325,7 +325,7 @@ class TuckerSpec:
             and self.precision == "fp32"  # batched program is fp32-only
         )
 
-    def resolved_dtype(self):
+    def resolved_dtype(self) -> Any:
         """The concrete working dtype, or ``None`` for "auto" (follow the
         jax x64 flag at execution time, like the legacy drivers)."""
         if self.dtype == "auto":
@@ -336,7 +336,7 @@ class TuckerSpec:
 
 
 def spec_for(
-    x,
+    x: Any,
     ranks: Sequence[int],
     **kwargs,
 ) -> TuckerSpec:

@@ -15,7 +15,7 @@ Known drift handled here:
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 

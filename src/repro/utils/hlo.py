@@ -42,6 +42,14 @@ _TRIVIAL = {
     "bitcast-convert", "after-all", "partition-id", "iota", "copy",
 }
 
+# Ops that move data between host and device (or synchronize with the host).
+HOST_TRANSFER_OPCODES = {
+    "infeed", "outfeed", "send", "recv", "send-done", "recv-done",
+    "copy-to-host", "copy-from-host",
+}
+# custom-call targets that re-enter Python / the host runtime.
+_HOST_CALLBACK_TARGET_RE = re.compile(r"callback|host_callback|py_func")
+
 
 def shape_bytes(type_str: str) -> int:
     """Total bytes of a (possibly tuple) HLO type string."""
@@ -82,6 +90,60 @@ class Computation:
 
 
 _HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class HloOp:
+    """One parsed instruction of a computation body."""
+
+    name: str
+    result_type: str
+    opcode: str
+    line: str
+
+
+def iter_ops(comp: "Computation"):
+    """Yield every parseable instruction of ``comp`` as an :class:`HloOp`."""
+    for line in comp.lines:
+        m = _OP_RE.match(line)
+        if m:
+            yield HloOp(m.group(1), m.group(2), m.group(3), line)
+
+
+def is_host_transfer(op: HloOp) -> bool:
+    """Does this op move data to/from the host (transfer or callback)?"""
+    if op.opcode in HOST_TRANSFER_OPCODES:
+        return True
+    if op.opcode == "custom-call":
+        mt = re.search(r'custom_call_target="([^"]+)"', op.line)
+        if mt and _HOST_CALLBACK_TARGET_RE.search(mt.group(1)):
+            return True
+    return False
+
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([0-9,\s]*)\}:\s*\((\d+),\s*\{([0-9,\s]*)\}(?:,\s*(\w+[\w-]*))?\)"
+)
+
+
+def parse_input_output_aliases(text: str) -> Dict[tuple, Tuple[int, tuple, str]]:
+    """Parse the module-level ``input_output_alias`` map.
+
+    Returns ``{output_index: (param_number, param_index, kind)}`` where the
+    indices are (possibly empty) tuple paths and ``kind`` is ``may-alias`` or
+    ``must-alias``. Donated jit arguments show up here; a donated buffer the
+    compiler could NOT alias is simply absent.
+    """
+    # the map nests one level of braces: { {0}: (2, {}, may-alias), ... }
+    m = re.search(r"input_output_alias=\{((?:[^{}]|\{[^{}]*\})*)\}", text)
+    if not m:
+        return {}
+    out: Dict[tuple, Tuple[int, tuple, str]] = {}
+    for e in _ALIAS_ENTRY_RE.finditer(m.group(1)):
+        out_idx = tuple(int(x) for x in e.group(1).split(",") if x.strip())
+        par_idx = tuple(int(x) for x in e.group(3).split(",") if x.strip())
+        out[out_idx] = (int(e.group(2)), par_idx, e.group(4) or "may-alias")
+    return out
 
 
 def split_computations(text: str) -> Dict[str, Computation]:
@@ -173,20 +235,16 @@ def _dot_flops_from_line(line: str, defs: Dict[str, str]) -> float:
     return 2.0 * out * contract
 
 
-def analyze_computation(comp: Computation) -> None:
-    defs: Dict[str, str] = {}
-    # first pass: map op name -> result type (includes parameters)
-    for line in comp.lines:
-        m = _OP_RE.match(line)
-        if m:
-            defs[m.group(1)] = m.group(2)
+def link_computation(comp: Computation) -> None:
+    """Fill ``comp.calls`` / ``comp.whiles`` (the call-graph edges) without
+    the full cost analysis. Idempotent: clears before re-extracting."""
+    comp.calls = []
+    comp.whiles = []
     for line in comp.lines:
         m = _OP_RE.match(line)
         if not m:
             continue
-        name, res_type, opcode = m.groups()
-        if opcode == "dot" or opcode == "convolution":
-            comp.dot_flops += _dot_flops_from_line(line, defs)
+        opcode = m.group(3)
         if opcode == "while":
             mb = re.search(r"body=%?([\w\.\-]+)", line)
             mt = re.search(r'known_trip_count.*?"n":"(\d+)"', line)
@@ -211,6 +269,23 @@ def analyze_computation(comp: Computation) -> None:
                 r"(?:true_computation|false_computation)=%?([\w\.\-]+)", line
             ):
                 comp.calls.append(mcall.group(1))
+
+
+def analyze_computation(comp: Computation) -> None:
+    link_computation(comp)
+    defs: Dict[str, str] = {}
+    # first pass: map op name -> result type (includes parameters)
+    for line in comp.lines:
+        m = _OP_RE.match(line)
+        if m:
+            defs[m.group(1)] = m.group(2)
+    for line in comp.lines:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, res_type, opcode = m.groups()
+        if opcode == "dot" or opcode == "convolution":
+            comp.dot_flops += _dot_flops_from_line(line, defs)
         if opcode in _COLLECTIVES:
             # operand bytes (the data actually moved)
             ops = re.search(r"\(([^)]*)\)", line[line.index("(") :])
@@ -262,46 +337,78 @@ class HloSummary:
         return sum(self.coll_bytes.values())
 
 
+def entry_computation_name(comps: Dict[str, Computation]) -> str:
+    for name in comps:
+        if name.startswith("main"):
+            return name
+    return next(iter(comps))
+
+
+def computation_multipliers(
+    comps: Dict[str, Computation], entry: Optional[str] = None
+) -> Dict[str, float]:
+    """Execution-count multiplier for every computation.
+
+    A computation's multiplier is the sum over all call paths from the entry
+    of the product of edge weights along the path (fusion/call/conditional
+    edges weigh 1 per call *site*, while-body edges weigh their
+    ``known_trip_count``). Accumulated in topological order so a computation
+    reached along several paths propagates its *final* multiplier to its
+    children — a breadth-first single-visit walk undercounts exactly there.
+    HLO call graphs are DAGs, so a topological order always exists.
+    """
+    if entry is None:
+        entry = entry_computation_name(comps)
+    for c in comps.values():
+        link_computation(c)  # idempotent; callers needn't pre-analyze
+    # weighted call edges, with per-site multiplicity
+    children: Dict[str, Dict[str, float]] = {}
+    for name, c in comps.items():
+        w: Dict[str, float] = {}
+        for callee in c.calls:
+            if callee in comps:
+                w[callee] = w.get(callee, 0.0) + 1.0
+        for body, trip in c.whiles:
+            if body in comps:
+                w[body] = w.get(body, 0.0) + float(trip)
+        children[name] = w
+    # reachable subgraph from the entry
+    reach = set()
+    stack = [entry]
+    while stack:
+        n = stack.pop()
+        if n in reach:
+            continue
+        reach.add(n)
+        stack.extend(k for k in children.get(n, ()) if k not in reach)
+    indeg = {n: 0 for n in reach}
+    for n in reach:
+        for callee in children[n]:
+            if callee in reach:
+                indeg[callee] += 1
+
+    import collections
+
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+    queue = collections.deque(n for n in reach if indeg[n] == 0)
+    while queue:
+        name = queue.popleft()
+        for callee, weight in children[name].items():
+            if callee not in reach:
+                continue
+            mult[callee] += mult[name] * weight
+            indeg[callee] -= 1
+            if indeg[callee] == 0:
+                queue.append(callee)
+    return mult
+
+
 def analyze_hlo(text: str) -> HloSummary:
     comps = split_computations(text)
     for c in comps.values():
         analyze_computation(c)
-
-    # multipliers: comp executed trip times if it's a while body (or called
-    # from one, transitively).
-    mult: Dict[str, float] = {name: 0.0 for name in comps}
-    entry = None
-    for name, c in comps.items():
-        if name.startswith("main") or entry is None:
-            if name.startswith("main"):
-                entry = name
-    if entry is None:
-        entry = next(iter(comps))
-
-    import collections
-
-    mult[entry] = 1.0
-    # propagate through call edges (fusions/calls: same multiplier; while
-    # bodies: multiplier * trip).
-    queue = collections.deque([entry])
-    visited_edges = set()
-    while queue:
-        name = queue.popleft()
-        c = comps[name]
-        for callee in c.calls:
-            if callee in comps:
-                key = (name, callee)
-                if key not in visited_edges:
-                    visited_edges.add(key)
-                    mult[callee] = mult.get(callee, 0.0) + mult[name]
-                    queue.append(callee)
-        for body, trip in c.whiles:
-            if body in comps:
-                key = (name, body, "w")
-                if key not in visited_edges:
-                    visited_edges.add(key)
-                    mult[body] = mult.get(body, 0.0) + mult[name] * trip
-                    queue.append(body)
+    mult = computation_multipliers(comps)
 
     flops = 0.0
     io = 0.0

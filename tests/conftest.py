@@ -5,7 +5,6 @@ import sys
 # ONLY in launch/dryrun.py.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import pytest
 
 

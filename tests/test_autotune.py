@@ -16,7 +16,6 @@ Acceptance criteria under test:
 import json
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
 from repro import tucker

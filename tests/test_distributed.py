@@ -1,6 +1,5 @@
 """Distributed paths on a multi-device host mesh (subprocess: tests keep the
 main process at 1 device per the dry-run isolation rule)."""
-import json
 import os
 import subprocess
 import sys

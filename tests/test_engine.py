@@ -6,7 +6,6 @@ orders, dtypes, ranks, and pathological sparsity patterns — and every engine
 must drive ``hooi_sparse`` to the same fit. Any new engine (or any change to
 the Pallas kernels / layouts) has to pass this file before it can ship.
 """
-import warnings
 
 import numpy as np
 import jax
@@ -19,6 +18,13 @@ from repro.core.hooi import hooi_sparse
 from repro.core.ttm import ttm_chain, ttm_unfolded
 from repro.sparse.generators import low_rank_sparse_tensor, random_sparse_tensor
 from repro.sparse.layout import build_mode_layout, layout_padding_fraction
+
+# engine parity is asserted through the legacy hooi_sparse shim on purpose
+# (the acceptance criterion predates repro.tucker) — opt back out of the
+# repo-wide warning-as-error promotion for exactly that message.
+pytestmark = pytest.mark.filterwarnings(
+    "default:hooi_sparse is deprecated"
+)
 
 ENGINES = E.available_engines()
 RNG = np.random.default_rng(0)

@@ -2,7 +2,6 @@
 import dataclasses
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config

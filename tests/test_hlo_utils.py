@@ -1,10 +1,15 @@
 """HLO analyzer: trip-count multipliers + dot flops vs analytic ground truth."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.utils.hlo import analyze_hlo, shape_bytes
+from repro.utils.hlo import (
+    analyze_hlo,
+    computation_multipliers,
+    parse_input_output_aliases,
+    shape_bytes,
+    split_computations,
+)
 
 
 def test_shape_bytes():
@@ -59,3 +64,136 @@ def test_unscanned_dot_counted_once():
     ).compile()
     s = analyze_hlo(compiled.as_text())
     assert s.dot_flops == pytest.approx(2 * n**3, rel=0.01)
+
+
+# a shared helper computation reached along TWO paths: called once directly
+# from the entry AND once per iteration of a trip-5 while body. Its total
+# multiplier must be 1 + 5 = 6 — and, crucially, so must its own callee's:
+# a single-visit BFS propagates only the first partial multiplier downward.
+_SHARED_CALLEE_HLO = """\
+HloModule test_mod
+
+%leaf.1 (p.9: f32[32,32]) -> f32[32,32] {
+  %p.9 = f32[32,32]{1,0} parameter(0)
+  ROOT %dot.9 = f32[32,32]{1,0} dot(f32[32,32]{1,0} %p.9, f32[32,32]{1,0} %p.9), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%shared.1 (p.5: f32[32,32]) -> f32[32,32] {
+  %p.5 = f32[32,32]{1,0} parameter(0)
+  ROOT %call.5 = f32[32,32]{1,0} call(f32[32,32]{1,0} %p.5), to_apply=%leaf.1
+}
+
+%body.1 (p.2: (f32[32,32])) -> (f32[32,32]) {
+  %p.2 = (f32[32,32]{1,0}) parameter(0)
+  %gte.2 = f32[32,32]{1,0} get-tuple-element((f32[32,32]{1,0}) %p.2), index=0
+  %call.2 = f32[32,32]{1,0} call(f32[32,32]{1,0} %gte.2), to_apply=%shared.1
+  ROOT %tuple.2 = (f32[32,32]{1,0}) tuple(f32[32,32]{1,0} %call.2)
+}
+
+%cond.1 (p.3: (f32[32,32])) -> pred[] {
+  %p.3 = (f32[32,32]{1,0}) parameter(0)
+  ROOT %c.3 = pred[] constant(false)
+}
+
+ENTRY %main.1 (a.1: f32[32,32]) -> f32[32,32] {
+  %a.1 = f32[32,32]{1,0} parameter(0)
+  %call.1 = f32[32,32]{1,0} call(f32[32,32]{1,0} %a.1), to_apply=%shared.1
+  %tuple.1 = (f32[32,32]{1,0}) tuple(f32[32,32]{1,0} %call.1)
+  %while.1 = (f32[32,32]{1,0}) while((f32[32,32]{1,0}) %tuple.1), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %gte.1 = f32[32,32]{1,0} get-tuple-element((f32[32,32]{1,0}) %while.1), index=0
+}
+"""
+
+
+def test_multiplier_accumulates_over_multiple_paths():
+    comps = split_computations(_SHARED_CALLEE_HLO)
+    mult = computation_multipliers(comps)
+    assert mult["main.1"] == 1.0
+    assert mult["body.1"] == 5.0
+    # reached from the entry (x1) and from every while iteration (x5) —
+    # and the child inherits the ACCUMULATED multiplier, not the first
+    # partial one.
+    assert mult["shared.1"] == 6.0
+    assert mult["leaf.1"] == 6.0
+    s = analyze_hlo(_SHARED_CALLEE_HLO)
+    assert s.dot_flops == pytest.approx(6 * 2 * 32**3)
+
+
+def test_two_call_sites_count_twice():
+    # the same fusion invoked from two separate call sites in one
+    # computation runs twice per visit of that computation.
+    text = _SHARED_CALLEE_HLO.replace(
+        "%call.1 = f32[32,32]{1,0} call(f32[32,32]{1,0} %a.1), "
+        "to_apply=%shared.1",
+        "%call.1 = f32[32,32]{1,0} call(f32[32,32]{1,0} %a.1), "
+        "to_apply=%shared.1\n"
+        "  %call.7 = f32[32,32]{1,0} call(f32[32,32]{1,0} %call.1), "
+        "to_apply=%shared.1",
+    )
+    comps = split_computations(text)
+    mult = computation_multipliers(comps)
+    assert mult["shared.1"] == 7.0
+    assert mult["leaf.1"] == 7.0
+
+
+def test_while_body_flops_visible():
+    # the analyzer follows while bodies: a lax.while_loop (no static trip
+    # count) still contributes its body's dot flops at least once.
+    n = 64
+
+    def f(x):
+        def cond(c):
+            return c[0] < 3
+
+        def body(c):
+            i, m = c
+            return i + 1, m @ m
+
+        _, out = jax.lax.while_loop(cond, body, (0, x))
+        return out
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((n, n), jnp.float32)
+    ).compile()
+    s = analyze_hlo(compiled.as_text())
+    assert s.dot_flops >= 2 * n**3
+
+
+def test_segment_program_while_body_counted(tmp_path):
+    # the snapshot segment program's sweep loop is a while over segment_len
+    # sweeps: per-sweep FLOPs parsed from its HLO must match the plain scan
+    # program's per-sweep FLOPs (same skeleton, different trip count).
+    from repro.sparse.generators import random_sparse_tensor
+    from repro.tucker import SnapshotSpec, TuckerSpec
+    from repro.tucker.planning import TuckerPlan
+
+    coo = random_sparse_tensor((12, 10, 8), 0.08, seed=0)
+    base = dict(
+        shape=(12, 10, 8), ranks=(3, 3, 2), method="gram", engine="xla"
+    )
+    scan = TuckerPlan(TuckerSpec(n_iter=4, **base)).analyze(coo)
+    seg = TuckerPlan(
+        TuckerSpec(
+            n_iter=4,
+            snapshot=SnapshotSpec(every_n_sweeps=2, directory=str(tmp_path)),
+            **base,
+        )
+    ).analyze(coo)
+    assert seg["program"] == "segment"
+    assert seg["n_sweeps_traced"] == 2
+    assert seg["dot_flops_per_sweep"] == pytest.approx(
+        scan["dot_flops_per_sweep"], rel=0.01
+    )
+
+
+def test_parse_input_output_aliases():
+    hdr = (
+        "HloModule jit_f, input_output_alias={ {0}: (2, {}, may-alias), "
+        "{1}: (3, {}, may-alias) }, entry_computation_layout={(f32[4]) -> f32[4]}"
+    )
+    aliases = parse_input_output_aliases(hdr)
+    assert aliases == {
+        (0,): (2, (), "may-alias"),
+        (1,): (3, (), "may-alias"),
+    }
+    assert parse_input_output_aliases("HloModule jit_g") == {}

@@ -1,7 +1,6 @@
 """HOOI via the plan/execute front-end: Alg. 1 vs Alg. 2, QRP-vs-SVD
 accuracy (paper Table II), and the legacy shims' bit-parity with the API."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -3,7 +3,6 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import get_config
 from repro.models import model as M

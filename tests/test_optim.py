@@ -1,6 +1,5 @@
 """AdamW + schedule + ZeRO spec + Tucker-QRP gradient compression."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P

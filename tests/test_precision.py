@@ -13,7 +13,6 @@ while every accumulator (one-hot scatter, MXU dot) stays f32. The contract:
 * the non-auto ``dtype`` axis (bfloat16/float32 storage) keeps composing.
 """
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
 from repro import tucker

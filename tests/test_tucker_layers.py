@@ -1,8 +1,6 @@
 """Paper technique inside the LM stack: Tucker-factorized layers."""
 import numpy as np
-import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.models.tucker_layers import (
     expert_compression_ratio, tucker_expert_apply, tucker_linear_apply,
