@@ -38,6 +38,16 @@ def engine_list(engine: str) -> list:
     return [resolve_engine(engine)]
 
 
+def registry_snapshot() -> dict:
+    """The process-wide ``repro.obs`` metrics registry as a JSON dict —
+    every BENCH_*.json artifact carries the run's counter state (plan
+    cache, schedule builds, autotune, dispatch, serve amortization) next
+    to its timings."""
+    import repro.obs as obs
+
+    return obs.registry.snapshot()
+
+
 def add_engine_arg(parser) -> None:
     parser.add_argument(
         "--engine", nargs="?", const="both", default="both",

@@ -158,6 +158,8 @@ def main(argv: Optional[list] = None) -> int:
 
     import jax
 
+    from benchmarks.common import registry_snapshot
+
     # the overhead gate divides a FIXED per-segment cost (one host sync +
     # one ~1ms checkpoint write) by five sweeps of compute, so it is only
     # meaningful on sweep-dominated problems: these shapes run ~25ms+ per
@@ -201,6 +203,7 @@ def main(argv: Optional[list] = None) -> int:
         "backend": jax.default_backend(),
         "overhead_gate": OVERHEAD_GATE,
         "cases": cases,
+        "metrics": registry_snapshot(),
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -127,6 +127,7 @@ def main(argv: Optional[list] = None) -> int:
 
     import jax
 
+    from benchmarks.common import registry_snapshot
     from repro import tucker
     from repro.sparse.layout import bucket_nnz
 
@@ -206,6 +207,7 @@ def main(argv: Optional[list] = None) -> int:
         },
         "sequential": seq,
         "cases": cases,
+        "metrics": registry_snapshot(),
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -130,6 +130,8 @@ def main(argv: Optional[list] = None) -> int:
 
     import jax
 
+    from benchmarks.common import registry_snapshot
+
     n_dev = len(jax.devices())
     from repro.utils.compat import has_shard_map
 
@@ -176,6 +178,7 @@ def main(argv: Optional[list] = None) -> int:
         "backend": jax.default_backend(),
         "devices": n_dev,
         "cases": cases,
+        "metrics": registry_snapshot(),
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -255,11 +255,87 @@ def bench_core_fusion(shape=(24, 18, 2048), ranks=(6, 4, 8), nnz=512) -> dict:
     }
 
 
+def bench_trace_overhead(
+    shape=(30, 24, 18), density=0.03, ranks=(4, 3, 2), n_iter=5, reps=9
+) -> dict:
+    """Overhead of the ``repro.obs`` tracing plane on the compiled scan
+    pipeline, measured two ways:
+
+      * enabled: paired interleaved reps of the SAME warm plan with tracing
+        on vs off — the span bookkeeping the instrumented call sites pay.
+      * disabled: the no-op fast path is too cheap to resolve end-to-end
+        (it vanishes in timer noise), so it is measured directly — a
+        microbenchmark of the disabled ``span()`` call, multiplied by the
+        spans one call emits and divided by the untraced wall-clock.
+
+    The ``obs-smoke`` CI gate holds disabled <= 1% and enabled <= 5%.
+    """
+    import jax
+
+    import repro.obs as obs
+    from repro import tucker
+    from repro.sparse.generators import random_sparse_tensor
+
+    coo = random_sparse_tensor(shape, density, seed=0)
+    plan = tucker.TuckerPlan(
+        tucker.TuckerSpec(
+            shape=tuple(shape), ranks=tuple(ranks), method="gram",
+            engine="xla", pipeline="scan", n_iter=n_iter,
+        )
+    )
+
+    def timed():
+        t0 = time.perf_counter()
+        out = plan(coo)
+        jax.block_until_ready(out.core)
+        return time.perf_counter() - t0
+
+    was_enabled = obs.enabled()
+    try:
+        obs.configure(enabled=False)
+        timed()  # warm: schedules + compile
+        obs.configure(enabled=True)
+        timed()
+        off, on = [], []
+        spans_per_call = 0
+        for _ in range(reps):
+            obs.configure(enabled=False)
+            off.append(timed())
+            obs.configure(enabled=True)
+            before = len(obs.tracer.events())
+            on.append(timed())
+            spans_per_call = len(obs.tracer.events()) - before
+        obs.configure(enabled=False)
+        med_off = float(np.median(off))
+        med_on = float(np.median(on))
+        # disabled fast path, measured where it actually happens
+        n = 200_000
+        t0 = time.perf_counter()
+        for _ in range(n):
+            with obs.span("bench.noop"):
+                pass
+        noop_s = (time.perf_counter() - t0) / n
+    finally:
+        obs.configure(enabled=was_enabled)
+    return {
+        "untraced_s": med_off,
+        "traced_s": med_on,
+        "spans_per_call": int(spans_per_call),
+        "noop_span_ns": noop_s * 1e9,
+        "enabled_overhead": med_on / max(med_off, 1e-12) - 1.0,
+        "disabled_overhead": spans_per_call * noop_s / max(med_off, 1e-12),
+    }
+
+
 def main(argv: Optional[list] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes / few iters (CI gate)")
     ap.add_argument("--out", default="BENCH_sweep.json")
+    ap.add_argument("--trace", action="store_true",
+                    help="also measure repro.obs tracing overhead on a warm "
+                         "scan plan and gate it (disabled <= 1%%, enabled "
+                         "<= 5%%)")
     ap.add_argument("--engine", default="both",
                     choices=("xla", "pallas", "both"))
     ap.add_argument("--baseline", default="",
@@ -343,6 +419,21 @@ def main(argv: Optional[list] = None) -> int:
                 flush=True,
             )
 
+    trace_overhead = None
+    if args.trace:
+        trace_overhead = bench_trace_overhead()
+        print(
+            f"trace overhead: untraced={trace_overhead['untraced_s']*1e3:.2f}ms "
+            f"traced={trace_overhead['traced_s']*1e3:.2f}ms "
+            f"enabled={trace_overhead['enabled_overhead']*100:+.2f}% "
+            f"disabled={trace_overhead['disabled_overhead']*100:.4f}% "
+            f"({trace_overhead['spans_per_call']} spans/call, "
+            f"noop={trace_overhead['noop_span_ns']:.0f}ns)",
+            flush=True,
+        )
+
+    import repro.obs as obs
+
     payload = {
         "benchmark": "sweep_bench",
         "smoke": bool(args.smoke),
@@ -352,6 +443,10 @@ def main(argv: Optional[list] = None) -> int:
         "cases": cases,
         "core_fusion": core_fusion,
         "autotune_cases": autotune_cases,
+        "trace_overhead": trace_overhead,
+        # the whole run's counter state (plan cache, schedule builds,
+        # autotune, dispatch counters) rides with every benchmark artifact
+        "metrics": obs.registry.snapshot(),
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
@@ -391,6 +486,24 @@ def main(argv: Optional[list] = None) -> int:
         print("CORE FUSION PARITY REGRESSION: "
               f"relerr={core_fusion['parity_relerr']:.2e}")
         return 1
+    if trace_overhead is not None:
+        # 0.5 ms absolute slack so shared-runner timer noise on ms-scale
+        # medians cannot flake the relative gate
+        slack = max(0.05 * trace_overhead["untraced_s"], 5e-4)
+        if trace_overhead["traced_s"] - trace_overhead["untraced_s"] > slack:
+            print(
+                "TRACE OVERHEAD REGRESSION: enabled tracing cost "
+                f"{trace_overhead['enabled_overhead']*100:.1f}% > 5% "
+                f"({trace_overhead['spans_per_call']} spans/call)"
+            )
+            return 1
+        if trace_overhead["disabled_overhead"] > 0.01:
+            print(
+                "TRACE OVERHEAD REGRESSION: the DISABLED fast path costs "
+                f"{trace_overhead['disabled_overhead']*100:.2f}% > 1% "
+                f"(noop span = {trace_overhead['noop_span_ns']:.0f}ns)"
+            )
+            return 1
     slow_tuned = [a for a in autotune_cases if a["autotune_speedup"] < 0.8]
     if slow_tuned:
         print("AUTOTUNE REGRESSION: the tuned config lost to the default "

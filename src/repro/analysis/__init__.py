@@ -50,6 +50,7 @@ from repro.analysis.runner import (
     MatrixReport,
     default_baseline_path,
     default_matrix,
+    lint_batch_plan,
     lint_plan,
     run_matrix,
 )
@@ -72,6 +73,7 @@ __all__ = [
     "default_baseline_path",
     "default_matrix",
     "donation_lint",
+    "lint_batch_plan",
     "lint_plan",
     "precision_lint",
     "retrace_hazard_lint",

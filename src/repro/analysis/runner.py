@@ -31,12 +31,15 @@ from repro.analysis.spec_lints import retrace_hazard_lint
 
 @dataclasses.dataclass
 class Cell:
-    """One point of the lint matrix."""
+    """One point of the lint matrix. ``batch > 0`` lints the vmapped batched
+    program (``TuckerPlan.lower_batch_hlo`` over that many member tensors)
+    instead of the per-tensor pipeline."""
 
     name: str
     spec: object  # TuckerSpec
     engine: Optional[object] = None  # prebuilt SweepEngine override
     min_devices: int = 1
+    batch: int = 0
 
 
 @dataclasses.dataclass
@@ -122,6 +125,9 @@ def default_matrix(snapshot_dir: Optional[str] = None) -> List[Cell]:
             "xla/segment/fp32", TuckerSpec(engine="xla", snapshot=snap, **base)
         ),
         Cell(
+            "xla/batched/fp32", TuckerSpec(engine="xla", **base), batch=4
+        ),
+        Cell(
             "sharded/scan/fp32",
             TuckerSpec(
                 engine="xla", shard=ShardSpec(num_devices=2), **base
@@ -177,6 +183,74 @@ def lint_plan(plan: Any, x: Any, *, baseline: Optional[Baseline] = None,
     return findings
 
 
+def lint_batch_plan(
+    plan: Any, coos: Sequence[Any], *, keys: Any = None,
+    baseline: Optional[Baseline] = None, where: Optional[str] = None,
+) -> List[Finding]:
+    """Contract lints against the vmapped batched program — the ONE XLA
+    dispatch ``TuckerPlan.batch`` (and every serving flush) runs for k
+    member tensors. The engine behind ``TuckerPlan.lint_batch``.
+
+    The donation contract here is the INVERSE of the per-tensor pipelines':
+    the batched program must donate nothing — member tensors and PRNG keys
+    are caller-owned (a service flush reuses them for retries and metrics),
+    so any input/output alias in the executable means a caller buffer would
+    be consumed by the dispatch.
+    """
+    text, meta = plan.lower_batch_hlo(coos, keys=keys)
+    where = where or f"{meta['engine']}/{meta['kind']}/{meta['precision']}"
+    findings = transfer_lint(text, where=where)
+    findings += donation_lint(
+        text, donated_params=meta["donated_params"], where=where
+    )
+    from repro.utils.hlo import parse_input_output_aliases
+
+    for (param, _idx, kind) in parse_input_output_aliases(text).values():
+        findings.append(
+            Finding(
+                "donation", "error", f"{where}/param{param}",
+                f"batched program aliases input parameter {param} to an "
+                f"output ({kind}) — the flush dispatch donates nothing, so "
+                "a caller-owned member/key buffer would be consumed",
+            )
+        )
+    findings += precision_lint(text, precision=meta["precision"], where=where)
+    findings += transfer_lint_jaxpr(
+        _batched_closed_jaxpr(plan, coos, keys), where=where
+    )
+    if baseline is not None:
+        findings, _suppressed = baseline.filter(findings)
+    return findings
+
+
+def _batched_closed_jaxpr(plan: Any, coos: Sequence[Any],
+                          keys: Any = None) -> Any:
+    """The closed jaxpr of the batched program (pre-XLA twin of the HLO
+    pass, same as ``_closed_jaxpr`` for the per-tensor pipelines)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import hooi as _hooi
+    from repro.sparse.layout import pad_coo_batch
+    from repro.tucker.planning import _stack_keys
+
+    spec = plan.spec
+    coos = [plan._check_sparse_input(c) for c in coos]
+    if keys is None:
+        keys = [None] * len(coos)
+    idx, val = pad_coo_batch(coos)
+    jkeys = _stack_keys(list(keys))
+
+    def f(indices: Any, values: Any, keys_: Any, tol: Any) -> Any:
+        return _hooi._batched_scan_sweeps.__wrapped__(
+            indices, values, keys_, tol,
+            shape=spec.shape, ranks=spec.ranks, method=spec.method,
+            n_iter=spec.n_iter, dtype=spec.resolved_dtype(),
+        )
+
+    return jax.make_jaxpr(f)(idx, val, jkeys, jnp.float32(spec.tol))
+
+
 def _closed_jaxpr(plan: Any, x: Any) -> Any:
     """The closed jaxpr of the plan's (unsharded) program — the pre-XLA
     view transfer-lint also audits, so a host callback is caught even if a
@@ -210,7 +284,7 @@ def _closed_jaxpr(plan: Any, x: Any) -> Any:
                 indices, values, factors_, core, xnorm2, tol,
                 jnp.float32(jnp.inf), jnp.asarray(False), jnp.int32(0),
                 jnp.int32(spec.n_iter), scheds,
-                segment_len=spec.snapshot.every_n_sweeps, **common,
+                segment_len=spec.snapshot.segment_len, **common,
             )
     else:
 
@@ -267,9 +341,21 @@ def run_matrix(
                 )
             )
             continue
-        coo = random_sparse_tensor(cell.spec.shape, density, seed=seed)
         plan_obj = TuckerPlan(cell.spec, engine=cell.engine)
-        findings = lint_plan(plan_obj, coo, where=cell.name)
+        if cell.batch > 0:
+            # distinct nnz per member, so the lint sees the padded batch
+            # exactly as a mixed-nnz serving flush would dispatch it
+            coos = [
+                random_sparse_tensor(
+                    cell.spec.shape, density * (1.0 + 0.25 * i),
+                    seed=seed + i,
+                )
+                for i in range(cell.batch)
+            ]
+            findings = lint_batch_plan(plan_obj, coos, where=cell.name)
+        else:
+            coo = random_sparse_tensor(cell.spec.shape, density, seed=seed)
+            findings = lint_plan(plan_obj, coo, where=cell.name)
         suppressed = 0
         if baseline is not None:
             findings, dropped = baseline.filter(findings)

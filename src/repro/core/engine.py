@@ -29,6 +29,7 @@ from typing import Dict, List, Optional, Sequence
 import jax
 
 from repro.core.coo import SparseCOO
+from repro.obs import registry as _obs_registry, span as _obs_span
 from repro.sparse.layout import (
     DeviceSchedule,
     KronReusePlan,
@@ -40,6 +41,17 @@ from repro.sparse.layout import (
 )
 
 ENGINES = ("xla", "pallas", "auto")
+
+# process-wide mirror of every engine's schedule_builds (labeled by what was
+# built), so the registry sees rebuild storms without holding engine refs.
+_SCHEDULE_BUILDS = {
+    kind: _obs_registry.counter(
+        "repro_schedule_builds_total",
+        "host-side schedule constructions + device uploads",
+        labels={"kind": kind},
+    )
+    for kind in ("layout", "kron", "device", "shard")
+}
 
 
 def pallas_available() -> bool:
@@ -153,18 +165,28 @@ class SweepEngine:
             self._bound_indices = weakref.ref(coo.indices, _release)
             self._bound_shape = tuple(coo.shape)
 
+    def _note_build(self, kind: str) -> None:
+        self.schedule_builds += 1
+        _SCHEDULE_BUILDS[kind].inc()
+
     def mode_layout(self, coo: SparseCOO, mode: int) -> SortedCOO:
         self._bind(coo)
         if mode not in self.layouts:
-            self.layouts[mode] = build_mode_layout(coo, mode, bn=self.bn, bi=self.bi)
-            self.schedule_builds += 1
+            with _obs_span("engine.schedule.build", kind="layout", mode=mode,
+                           nnz=int(coo.nnz)):
+                self.layouts[mode] = build_mode_layout(
+                    coo, mode, bn=self.bn, bi=self.bi
+                )
+            self._note_build("layout")
         return self.layouts[mode]
 
     def kron_plan(self, coo: SparseCOO, mode: int) -> KronReusePlan:
         self._bind(coo)
         if mode not in self.kron_plans:
-            self.kron_plans[mode] = build_kron_reuse(coo, mode)
-            self.schedule_builds += 1
+            with _obs_span("engine.schedule.build", kind="kron", mode=mode,
+                           nnz=int(coo.nnz)):
+                self.kron_plans[mode] = build_kron_reuse(coo, mode)
+            self._note_build("kron")
         return self.kron_plans[mode]
 
     def device_schedule(self, coo: SparseCOO, mode: int) -> Optional[DeviceSchedule]:
@@ -175,15 +197,19 @@ class SweepEngine:
         self._bind(coo)
         if mode not in self.dev_schedules:
             if self.name == "pallas":
-                self.dev_schedules[mode] = DeviceSchedule.from_layout(
-                    self.mode_layout(coo, mode)
-                )
-                self.schedule_builds += 1
+                with _obs_span("engine.schedule.upload", kind="device",
+                               mode=mode, engine=self.name):
+                    self.dev_schedules[mode] = DeviceSchedule.from_layout(
+                        self.mode_layout(coo, mode)
+                    )
+                self._note_build("device")
             elif self.use_kron_reuse:
-                self.dev_schedules[mode] = DeviceSchedule.from_kron_plan(
-                    self.kron_plan(coo, mode), mode, tuple(coo.shape)
-                )
-                self.schedule_builds += 1
+                with _obs_span("engine.schedule.upload", kind="device",
+                               mode=mode, engine=self.name):
+                    self.dev_schedules[mode] = DeviceSchedule.from_kron_plan(
+                        self.kron_plan(coo, mode), mode, tuple(coo.shape)
+                    )
+                self._note_build("device")
             else:
                 # the plain-XLA path needs no schedule: not a build.
                 self.dev_schedules[mode] = None
@@ -205,10 +231,13 @@ class SweepEngine:
             self._shard_values = weakref.ref(coo.values)
         key = (mesh, tuple(nnz_axes), pad_nnz_to)
         if key not in self.shard_schedules:
-            self.shard_schedules[key] = build_shard_schedule(
-                coo, mesh, tuple(nnz_axes), target_nnz=pad_nnz_to
-            )
-            self.schedule_builds += 1
+            with _obs_span("engine.schedule.upload", kind="shard",
+                           nnz=int(coo.nnz),
+                           pad_nnz_to=pad_nnz_to and int(pad_nnz_to)):
+                self.shard_schedules[key] = build_shard_schedule(
+                    coo, mesh, tuple(nnz_axes), target_nnz=pad_nnz_to
+                )
+            self._note_build("shard")
         return self.shard_schedules[key]
 
     def apply_blocks(self, cfg) -> None:

@@ -37,8 +37,26 @@ from repro.core.kron import (
 )
 from repro.core.qrp import factor_update
 from repro.core.ttm import ttm_unfolded
+from repro.obs import registry as _obs_registry
 
 PIPELINES = ("scan", "python")
+
+
+class _MirroredCounter(collections.Counter):
+    """A ``collections.Counter`` whose every increment also ticks one
+    registry :class:`~repro.obs.metrics.Counter` — the keyed dicts below
+    stay the fine-grained source the regression tests read, while the
+    registry (and so Prometheus / the BENCH writers) sees the totals."""
+
+    def __init__(self, metric_name: str, help: str) -> None:
+        super().__init__()
+        self._metric = _obs_registry.counter(metric_name, help)
+
+    def __setitem__(self, key, value) -> None:
+        delta = value - self.get(key, 0)
+        if delta > 0:
+            self._metric.inc(delta)
+        super().__setitem__(key, value)
 
 # -- instrumentation ---------------------------------------------------------
 # SWEEP_TRACE_COUNTS ticks once per *trace* of the compiled sweep pipeline
@@ -47,8 +65,14 @@ PIPELINES = ("scan", "python")
 # ticks once per top-level XLA dispatch the sparse driver issues: the scan
 # pipeline is exactly 1 per hooi_sparse call, the legacy python pipeline is 1
 # per sweep.
-SWEEP_TRACE_COUNTS: collections.Counter = collections.Counter()
-SWEEP_DISPATCH_COUNTS: collections.Counter = collections.Counter()
+SWEEP_TRACE_COUNTS: collections.Counter = _MirroredCounter(
+    "repro_sweep_traces_total",
+    "traces of the compiled sweep pipelines (retraces when it keeps rising)",
+)
+SWEEP_DISPATCH_COUNTS: collections.Counter = _MirroredCounter(
+    "repro_sweep_dispatches_total",
+    "top-level XLA dispatches issued by the sparse drivers",
+)
 
 # the single device->host transfer of the scan pipeline (fit history); a
 # module-level seam so tests can count that it really happens exactly once.

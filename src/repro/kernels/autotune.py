@@ -37,6 +37,10 @@ from typing import Dict, List, NamedTuple, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import event as _obs_event
+from repro.obs import registry as _obs_registry
+from repro.obs import span as _obs_span
+
 TABLE_ENV = "REPRO_AUTOTUNE_TABLE"
 TABLE_VERSION = 1
 LAYOUTS = ("split", "fused")
@@ -47,6 +51,21 @@ VMEM_BUDGET_BYTES = 16 * 2**20
 # one process-wide counter set, reset by tests: a warm plan must show zero
 # searches and zero trials (the acceptance criterion of the tuning table).
 COUNTERS: Dict[str, int] = {"searches": 0, "trials": 0, "table_hits": 0}
+
+# registry twins of COUNTERS — cumulative (reset_counters does not touch
+# them), so Prometheus sees lifetime totals while tests keep their
+# resettable process-local dict.
+_REG_COUNTERS = {
+    k: _obs_registry.counter(
+        f"repro_autotune_{k}_total", f"autotune {k.replace('_', ' ')}"
+    )
+    for k in COUNTERS
+}
+
+
+def _count(kind: str) -> None:
+    COUNTERS[kind] += 1
+    _REG_COUNTERS[kind].inc()
 
 
 def reset_counters() -> None:
@@ -330,7 +349,23 @@ def trial_time_ms(
     from repro.core import hooi as _hooi
     from repro.core.engine import make_engine
 
-    COUNTERS["trials"] += 1
+    _count("trials")
+    with _obs_span("autotune.trial", layout=cfg.layout, bn=cfg.bn, bi=cfg.bi,
+                   nnz=min(int(nnz), TRIAL_NNZ_CAP)) as _sp:
+        return _trial_time_ms_body(
+            _sp, cfg, shape, ranks, nnz, dtype=dtype, precision=precision,
+            interpret=interpret, repeats=repeats,
+        )
+
+
+def _trial_time_ms_body(_sp, cfg, shape, ranks, nnz, *, dtype, precision,
+                        interpret, repeats) -> float:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import hooi as _hooi
+    from repro.core.engine import make_engine
+
     coo = _synthetic_coo(shape, min(int(nnz), TRIAL_NNZ_CAP), dtype)
     eng = make_engine(
         "pallas", precision=precision, interpret=interpret,
@@ -361,6 +396,7 @@ def trial_time_ms(
         t0 = time.perf_counter()
         sweep()
         best = min(best, time.perf_counter() - t0)
+    _sp.set_attr("best_ms", best * 1e3)
     return best * 1e3
 
 
@@ -392,22 +428,29 @@ def autotune(
     if not force:
         hit = table.get(fp)
         if hit is not None:
-            COUNTERS["table_hits"] += 1
+            _count("table_hits")
+            _obs_event("autotune.table_hit", fingerprint=fp)
             return hit
-    COUNTERS["searches"] += 1
-    cands = candidate_configs(shape, ranks, nnz, precision=precision)
-    cands = cands[: max(1, int(max_trials))]
-    best_cfg, best_ms = DEFAULT_CONFIG, float("inf")
-    for cfg in cands:
-        try:
-            ms = trial_time_ms(
-                cfg, shape, ranks, nnz,
-                dtype=dtype, precision=precision, interpret=interpret,
-            )
-        except Exception:  # an untunable candidate loses, never crashes
-            continue
-        if ms < best_ms:
-            best_cfg, best_ms = cfg, ms
+    _count("searches")
+    with _obs_span("autotune.search", fingerprint=fp,
+                   max_trials=int(max_trials)) as _sp:
+        cands = candidate_configs(shape, ranks, nnz, precision=precision)
+        cands = cands[: max(1, int(max_trials))]
+        best_cfg, best_ms = DEFAULT_CONFIG, float("inf")
+        for cfg in cands:
+            try:
+                ms = trial_time_ms(
+                    cfg, shape, ranks, nnz,
+                    dtype=dtype, precision=precision, interpret=interpret,
+                )
+            except Exception:  # an untunable candidate loses, never crashes
+                continue
+            if ms < best_ms:
+                best_cfg, best_ms = cfg, ms
+        _sp.set_attr("layout", best_cfg.layout)
+        _sp.set_attr(
+            "best_ms", None if best_ms == float("inf") else best_ms
+        )
     table.put(
         fp, best_cfg,
         key={

@@ -13,6 +13,13 @@ import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
+from repro.obs import event as _obs_event
+from repro.obs import registry as _obs_registry
+
+_RETRIES = _obs_registry.counter(
+    "repro_retries_total", "retried attempts under run_with_retries"
+)
+
 
 @dataclasses.dataclass
 class FtConfig:
@@ -107,6 +114,8 @@ def run_with_retries(fn: Callable, cfg: FtConfig, on_retry: Optional[Callable] =
             if attempt >= cfg.max_retries:
                 raise  # terminal: no pointless backoff before the caller sees it
             last = e
+            _RETRIES.inc()
+            _obs_event("retry.attempt", attempt=attempt, error=type(e).__name__)
             if on_retry:
                 on_retry(attempt, e)
             time.sleep(cfg.retry_backoff_s * (2 ** attempt))

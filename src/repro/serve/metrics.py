@@ -7,14 +7,37 @@ reasons (did batches fill, or did the timeout fire half-empty?), achieved
 batch sizes, padding overhead from nnz bucketing, and queue/execute/total
 latency distributions (p50/p99). Thread-safe; ``snapshot()`` returns plain
 dicts for JSON benchmarks and CI gates.
+
+Since the unified telemetry plane (``repro.obs``), every counter here is a
+handle into the process-wide :data:`repro.obs.registry` — labeled
+``service="svc-N"`` so concurrent services coexist in one exposition — which
+is what puts the amortization counters on ``registry.render_prometheus()``
+and in the BENCH JSON metrics snapshots. The public ``snapshot()`` dict is
+unchanged (bit-compatible with the pre-registry implementation), and one
+``ServiceMetrics``-level lock still covers every multi-metric update and
+read: a flush's counter bumps land atomically, never as a torn snapshot.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 from collections import Counter, deque
 from typing import Deque, Dict, Sequence
 
 import numpy as np
+
+from repro.obs import registry as _obs_registry
+
+# serve-plane latency histogram buckets (ms): finer than the default grid at
+# the micro-batching sweet spot (sub-ms queue waits to ~100 ms executes).
+_LATENCY_BUCKETS_MS = (
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
+    1000.0, 2500.0,
+)
+
+# one label per ServiceMetrics instance so N live services report distinct
+# children of the same metric families.
+_SERVICE_IDS = itertools.count()
 
 
 class LatencyTracker:
@@ -38,12 +61,18 @@ class LatencyTracker:
         return float(np.percentile(np.asarray(self._samples), p))
 
     def summary(self) -> Dict[str, float]:
+        """``count`` is lifetime observations; ``window`` is the samples
+        actually retained in the reservoir — the ones the percentiles are
+        computed over. On a long soak the two diverge (count >> window):
+        p50/p99 describe the recent window, not the whole run."""
         if not self._samples:
-            return {"count": 0, "p50_ms": float("nan"), "p99_ms": float("nan"),
+            return {"count": int(self.count), "window": 0,
+                    "p50_ms": float("nan"), "p99_ms": float("nan"),
                     "mean_ms": float("nan"), "max_ms": float("nan")}
         arr = np.asarray(self._samples)
         return {
             "count": int(self.count),
+            "window": int(arr.size),
             "p50_ms": float(np.percentile(arr, 50)),
             "p99_ms": float(np.percentile(arr, 99)),
             "mean_ms": float(arr.mean()),
@@ -63,30 +92,144 @@ class ServiceMetrics:
         bucketing: at most the bucket growth factor for requests at or
         above the bucket base, up to ``base / nnz`` for smaller ones);
       * latency summaries for queue wait, batched execute, and end-to-end.
+
+    Counter state lives in :data:`repro.obs.registry` handles labeled with
+    this instance's ``service`` id; the instance lock (not the per-metric
+    registry locks) is what makes multi-metric updates and ``snapshot()``
+    reads atomic with respect to each other.
     """
 
-    def __init__(self, latency_window: int = 8192) -> None:
+    def __init__(self, latency_window: int = 8192,
+                 service: str = "") -> None:
         self._lock = threading.Lock()
-        self.submitted = 0
-        self.completed = 0
-        self.failed = 0
-        self.flushes: Counter = Counter()  # reason -> count
-        self.dispatches = 0  # top-level XLA dispatches issued by flushes
-        self.batch_size_sum = 0
-        self.batch_size_max = 0
-        self.nnz_real_sum = 0
-        self.nnz_padded_sum = 0
-        self.plan_evictions = 0  # global plan-cache evictions observed
-        self.retries = 0  # transient flush failures retried in place
+        self.service = service or f"svc-{next(_SERVICE_IDS)}"
+        lbl = {"service": self.service}
+        reg = _obs_registry
+        self._submitted = reg.counter(
+            "repro_serve_submitted_total", "requests submitted", labels=lbl
+        )
+        self._completed = reg.counter(
+            "repro_serve_completed_total", "requests completed", labels=lbl
+        )
+        self._failed = reg.counter(
+            "repro_serve_failed_total", "requests failed", labels=lbl
+        )
+        self._dispatches = reg.counter(
+            "repro_serve_dispatches_total",
+            "top-level XLA dispatches issued by flushes", labels=lbl,
+        )
+        self._batch_size_sum = reg.counter(
+            "repro_serve_batch_size_sum", "sum of flushed batch sizes",
+            labels=lbl,
+        )
+        self._batch_size_max = reg.gauge(
+            "repro_serve_batch_size_max", "largest batch flushed so far",
+            labels=lbl,
+        )
+        self._nnz_real = reg.counter(
+            "repro_serve_nnz_real_total", "real nonzeros streamed",
+            labels=lbl,
+        )
+        self._nnz_padded = reg.counter(
+            "repro_serve_nnz_padded_total",
+            "padded nonzero slots streamed (bucketing overhead)", labels=lbl,
+        )
+        self._plan_evictions = reg.counter(
+            "repro_serve_plan_evictions_total",
+            "global plan-cache evictions observed", labels=lbl,
+        )
+        self._retries = reg.counter(
+            "repro_serve_retries_total",
+            "transient flush failures retried in place", labels=lbl,
+        )
+        self._pending = reg.gauge(
+            "repro_serve_pending", "requests queued but not yet resolved",
+            labels=lbl,
+        )
+        # reason-labeled flush counters materialize lazily (reasons are a
+        # small closed set: full/timeout/drain)
+        self._flush_counters: Dict[str, object] = {}
+        # exact recent-window percentiles stay on the deque reservoirs
+        # (snapshot() bit-compat); the registry histograms expose the same
+        # streams to Prometheus with cumulative-bucket semantics.
         self.queue = LatencyTracker(latency_window)
         self.execute = LatencyTracker(latency_window)
         self.total = LatencyTracker(latency_window)
+        self._hist = {
+            name: reg.histogram(
+                f"repro_serve_{name}_latency_ms",
+                f"{name} latency (milliseconds)",
+                labels=lbl, buckets=_LATENCY_BUCKETS_MS,
+            )
+            for name in ("queue", "execute", "total")
+        }
+
+    # -- registry-backed views (names mirror the historical attributes) -----
+
+    @property
+    def submitted(self) -> int:
+        return int(self._submitted.value)
+
+    @property
+    def completed(self) -> int:
+        return int(self._completed.value)
+
+    @property
+    def failed(self) -> int:
+        return int(self._failed.value)
+
+    @property
+    def dispatches(self) -> int:
+        return int(self._dispatches.value)
+
+    @property
+    def batch_size_sum(self) -> int:
+        return int(self._batch_size_sum.value)
+
+    @property
+    def batch_size_max(self) -> int:
+        return int(self._batch_size_max.value)
+
+    @property
+    def nnz_real_sum(self) -> int:
+        return int(self._nnz_real.value)
+
+    @property
+    def nnz_padded_sum(self) -> int:
+        return int(self._nnz_padded.value)
+
+    @property
+    def plan_evictions(self) -> int:
+        return int(self._plan_evictions.value)
+
+    @property
+    def retries(self) -> int:
+        return int(self._retries.value)
+
+    @property
+    def flushes(self) -> Counter:
+        """reason -> count, as a plain Counter (historical shape)."""
+        with self._lock:
+            return Counter(
+                {r: int(c.value) for r, c in self._flush_counters.items()}
+            )
+
+    def _flush_counter(self, reason: str):
+        c = self._flush_counters.get(reason)
+        if c is None:
+            c = _obs_registry.counter(
+                "repro_serve_flushes_total", "flushes by reason",
+                labels={"service": self.service, "reason": reason},
+            )
+            self._flush_counters[reason] = c
+        return c
 
     # -- recording (called by the service) ---------------------------------
 
     def on_submit(self, n: int = 1) -> None:
         with self._lock:
-            self.submitted += n
+            self._submitted.inc(n)
+            self._pending.inc(n)
 
     def on_flush(
         self,
@@ -100,33 +243,39 @@ class ServiceMetrics:
         total_ms: Sequence[float],
     ) -> None:
         with self._lock:
-            self.flushes[reason] += 1
-            self.dispatches += int(dispatches)
-            self.completed += int(batch_size)
-            self.batch_size_sum += int(batch_size)
-            self.batch_size_max = max(self.batch_size_max, int(batch_size))
-            self.nnz_real_sum += int(nnz_real)
-            self.nnz_padded_sum += int(nnz_padded)
+            self._flush_counter(reason).inc()
+            self._dispatches.inc(int(dispatches))
+            self._completed.inc(int(batch_size))
+            self._pending.dec(int(batch_size))
+            self._batch_size_sum.inc(int(batch_size))
+            if int(batch_size) > int(self._batch_size_max.value):
+                self._batch_size_max.set(int(batch_size))
+            self._nnz_real.inc(int(nnz_real))
+            self._nnz_padded.inc(int(nnz_padded))
             self.execute.observe(execute_ms)
+            self._hist["execute"].observe(float(execute_ms))
             for q in queue_ms:
                 self.queue.observe(q)
+                self._hist["queue"].observe(float(q))
             for t in total_ms:
                 self.total.observe(t)
+                self._hist["total"].observe(float(t))
 
     def on_failure(self, batch_size: int) -> None:
         with self._lock:
-            self.failed += int(batch_size)
+            self._failed.inc(int(batch_size))
+            self._pending.dec(int(batch_size))
 
     def on_plan_eviction(self) -> None:
         with self._lock:
-            self.plan_evictions += 1
+            self._plan_evictions.inc()
 
     def on_retry(self) -> None:
         """A flush's dispatch failed transiently and is being retried in
         place (``runtime.fault_tolerance.run_with_retries``); the batch is
         not failed — only the terminal failure reaches ``on_failure``."""
         with self._lock:
-            self.retries += 1
+            self._retries.inc()
 
     # -- derived -----------------------------------------------------------
 
@@ -134,12 +283,14 @@ class ServiceMetrics:
     # public accessors and snapshot() (whose non-reentrant lock is already
     # held when it needs them)
     def _requests_per_dispatch(self) -> float:
-        return self.completed / self.dispatches if self.dispatches else 0.0
+        d = int(self._dispatches.value)
+        return int(self._completed.value) / d if d else 0.0
 
     def _padding_overhead(self) -> float:
-        if not self.nnz_real_sum:
+        real = int(self._nnz_real.value)
+        if not real:
             return float("nan")
-        return self.nnz_padded_sum / self.nnz_real_sum
+        return int(self._nnz_padded.value) / real
 
     def requests_per_dispatch(self) -> float:
         with self._lock:
@@ -153,22 +304,28 @@ class ServiceMetrics:
     def snapshot(self) -> dict:
         """Consistent JSON-ready view of every counter and distribution."""
         with self._lock:
-            flushes = dict(self.flushes)
+            flushes = {
+                r: int(c.value) for r, c in self._flush_counters.items()
+            }
             n_flushes = sum(flushes.values())
+            submitted = int(self._submitted.value)
+            completed = int(self._completed.value)
+            failed = int(self._failed.value)
             snap = {
-                "submitted": self.submitted,
-                "completed": self.completed,
-                "failed": self.failed,
-                "pending": self.submitted - self.completed - self.failed,
-                "dispatches": self.dispatches,
+                "submitted": submitted,
+                "completed": completed,
+                "failed": failed,
+                "pending": submitted - completed - failed,
+                "dispatches": int(self._dispatches.value),
                 "flushes": flushes,
                 "requests_per_dispatch": self._requests_per_dispatch(),
                 "batch_size_mean": (
-                    self.batch_size_sum / n_flushes if n_flushes else 0.0
+                    int(self._batch_size_sum.value) / n_flushes
+                    if n_flushes else 0.0
                 ),
-                "batch_size_max": self.batch_size_max,
-                "plan_evictions": self.plan_evictions,
-                "retries": self.retries,
+                "batch_size_max": int(self._batch_size_max.value),
+                "plan_evictions": int(self._plan_evictions.value),
+                "retries": int(self._retries.value),
                 "padding_overhead": self._padding_overhead(),
                 "queue": self.queue.summary(),
                 "execute": self.execute.summary(),

@@ -26,12 +26,14 @@ Synchronous API, internally queued: ``submit`` never blocks on device work;
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import time
 import warnings
 from typing import Any, List, Optional, Sequence, Set
 
 from repro.core.coo import SparseCOO
+from repro.obs import event as _obs_event, span as _obs_span
 from repro.serve.batching import BatchKey, Flush, MicroBatcher
 from repro.serve.metrics import ServiceMetrics
 from repro.sparse.layout import bucket_nnz, shard_pad_nnz
@@ -132,13 +134,25 @@ class ServiceConfig:
     retry_backoff_ms: float = 50.0
 
 
+# process-wide monotonic ticket ids: the `ticket` span attribute that links a
+# request's submit span (producer thread) to its batch's flush/dispatch/split
+# spans (scheduler thread) in one exported trace.
+_TICKET_IDS = itertools.count(1)
+
+
 class TuckerTicket:
     """Future-style handle for one submitted request. Deliberately NOT a
     ``concurrent.futures.Future``: requests are never cancellable once
     queued (a flush takes its whole batch), so the Future cancel/running
-    state machine would be dead API surface here."""
+    state machine would be dead API surface here.
+
+    ``ticket_id`` is a process-wide monotonic id; it is also the ``ticket``
+    attribute on the request's serve-plane spans, so one request's queue
+    wait and its batch's execute can be correlated in a trace.
+    """
 
     def __init__(self) -> None:
+        self.ticket_id = next(_TICKET_IDS)
         self._done = threading.Event()
         self._result: Optional[TuckerResult] = None
         self._exception: Optional[BaseException] = None
@@ -298,14 +312,22 @@ class TuckerService:
             ),
             dtype=str(dt) if dt is not None else str(coo.values.dtype),
         )
-        with self._cv:
-            if self._closing:
-                raise RuntimeError("TuckerService is closed")
-            self._batcher.add(bkey, item, now)
-            # counted before the notify can race a flush: 'submitted' never
-            # trails 'completed' in a concurrent snapshot
-            self.metrics.on_submit()
-            self._cv.notify()
+        with _obs_span(
+            "serve.submit", ticket=ticket.ticket_id, nnz=int(coo.nnz),
+            bucket=int(bkey.bucket),
+        ):
+            with self._cv:
+                if self._closing:
+                    raise RuntimeError("TuckerService is closed")
+                self._batcher.add(bkey, item, now)
+                _obs_event(
+                    "serve.enqueue", ticket=ticket.ticket_id,
+                    bucket=int(bkey.bucket),
+                )
+                # counted before the notify can race a flush: 'submitted'
+                # never trails 'completed' in a concurrent snapshot
+                self.metrics.on_submit()
+                self._cv.notify()
         return ticket
 
     def decompose_batch(
@@ -426,89 +448,112 @@ class TuckerService:
         from repro import tucker
 
         items = batch.items
+        tickets = [it.ticket.ticket_id for it in items]
         dequeued_at = time.perf_counter()
-        try:
-            plan = tucker.plan(batch.key.spec)
-            # the same predicate batch() decides with — including per-key
-            # fallbacks (e.g. non-threefry impls), so the padding metrics
-            # below describe what actually executed
-            vmappable = plan.batch_is_vmappable([it.key for it in items])
-            # sequential fallback: no shared program to pad for — except the
-            # sharded path, whose per-member shard_map program is also
-            # shape-keyed on the padded nnz: bucket-pad it too, so mixed-nnz
-            # flushes reuse one compiled program per (spec, bucket)
-            shard = plan.spec.shard
-            pad_to = (
-                batch.key.bucket if (vmappable or shard is not None) else None
-            )
-
-            def dispatch() -> Any:
-                return plan.batch(
-                    [it.coo for it in items],
-                    keys=[it.key for it in items],
-                    pad_nnz_to=pad_to,
+        with _obs_span(
+            "serve.flush", reason=batch.reason, batch_size=len(items),
+            bucket=int(batch.key.bucket), tickets=tickets,
+        ) as fsp:
+            try:
+                plan = tucker.plan(batch.key.spec)
+                # the same predicate batch() decides with — including per-key
+                # fallbacks (e.g. non-threefry impls), so the padding metrics
+                # below describe what actually executed
+                vmappable = plan.batch_is_vmappable([it.key for it in items])
+                # sequential fallback: no shared program to pad for — except
+                # the sharded path, whose per-member shard_map program is also
+                # shape-keyed on the padded nnz: bucket-pad it too, so
+                # mixed-nnz flushes reuse one compiled program per
+                # (spec, bucket)
+                shard = plan.spec.shard
+                pad_to = (
+                    batch.key.bucket
+                    if (vmappable or shard is not None) else None
                 )
+                fsp.set_attr("vmappable", bool(vmappable))
 
-            if self.config.max_retries > 0:
-                from repro.runtime.fault_tolerance import (
-                    FtConfig,
-                    run_with_retries,
-                )
+                def dispatch() -> Any:
+                    with _obs_span(
+                        "serve.dispatch", tickets=tickets,
+                        batch_size=len(items),
+                        pad_nnz_to=int(pad_to) if pad_to is not None else None,
+                    ):
+                        return plan.batch(
+                            [it.coo for it in items],
+                            keys=[it.key for it in items],
+                            pad_nnz_to=pad_to,
+                        )
 
-                results = run_with_retries(
-                    dispatch,
-                    FtConfig(
-                        max_retries=self.config.max_retries,
-                        retry_backoff_s=self.config.retry_backoff_ms / 1e3,
+                if self.config.max_retries > 0:
+                    from repro.runtime.fault_tolerance import (
+                        FtConfig,
+                        run_with_retries,
+                    )
+
+                    results = run_with_retries(
+                        dispatch,
+                        FtConfig(
+                            max_retries=self.config.max_retries,
+                            retry_backoff_s=(
+                                self.config.retry_backoff_ms / 1e3
+                            ),
+                        ),
+                        on_retry=lambda attempt, exc: self.metrics.on_retry(),
+                    )
+                else:
+                    results = dispatch()
+            except Exception as exc:  # fail the batch, keep scheduler alive
+                for it in items:
+                    it.ticket._set_exception(exc)
+                self.metrics.on_failure(len(items))
+                fsp.set_attr("error", type(exc).__name__)
+                return
+            # plan.batch is synchronous through its device->host history
+            # fetch, so `done` is an honest end-to-end execute timestamp.
+            done = time.perf_counter()
+            execute_ms = (done - dequeued_at) * 1e3
+            queue_ms, total_ms = [], []
+            for it, res in zip(items, results):
+                q_ms = (dequeued_at - it.submitted_at) * 1e3
+                t_ms = (done - it.submitted_at) * 1e3
+                res.timing = RequestTiming(
+                    queue_ms=q_ms,
+                    execute_ms=execute_ms,
+                    total_ms=t_ms,
+                    batch_size=len(items),
+                    nnz=it.coo.nnz,
+                    # the fallback path runs each tensor at its real nnz:
+                    # honest padding metrics, not the bucket it would have
+                    # padded to. The sharded path pads to the bucket and then
+                    # to the even shard multiple — report what actually
+                    # streamed.
+                    nnz_padded=(
+                        shard_pad_nnz(batch.key.bucket, shard.num_devices)
+                        if shard is not None
+                        else (batch.key.bucket if vmappable else it.coo.nnz)
                     ),
-                    on_retry=lambda attempt, exc: self.metrics.on_retry(),
+                    flush_reason=batch.reason,
                 )
-            else:
-                results = dispatch()
-        except Exception as exc:  # fail the batch, keep the scheduler alive
-            for it in items:
-                it.ticket._set_exception(exc)
-            self.metrics.on_failure(len(items))
-            return
-        # plan.batch is synchronous through its device->host history fetch,
-        # so `done` is an honest end-to-end execute timestamp.
-        done = time.perf_counter()
-        execute_ms = (done - dequeued_at) * 1e3
-        queue_ms, total_ms = [], []
-        for it, res in zip(items, results):
-            q_ms = (dequeued_at - it.submitted_at) * 1e3
-            t_ms = (done - it.submitted_at) * 1e3
-            res.timing = RequestTiming(
-                queue_ms=q_ms,
-                execute_ms=execute_ms,
-                total_ms=t_ms,
+                queue_ms.append(q_ms)
+                total_ms.append(t_ms)
+            self.metrics.on_flush(
+                reason=batch.reason,
                 batch_size=len(items),
-                nnz=it.coo.nnz,
-                # the fallback path runs each tensor at its real nnz: honest
-                # padding metrics, not the bucket it would have padded to.
-                # The sharded path pads to the bucket and then to the even
-                # shard multiple — report what actually streamed.
-                nnz_padded=(
-                    shard_pad_nnz(batch.key.bucket, shard.num_devices)
-                    if shard is not None
-                    else (batch.key.bucket if vmappable else it.coo.nnz)
-                ),
-                flush_reason=batch.reason,
+                dispatches=sum(r.dispatches for r in results),
+                nnz_real=sum(it.coo.nnz for it in items),
+                nnz_padded=sum(r.timing.nnz_padded for r in results),
+                execute_ms=execute_ms,
+                queue_ms=queue_ms,
+                total_ms=total_ms,
             )
-            queue_ms.append(q_ms)
-            total_ms.append(t_ms)
-        self.metrics.on_flush(
-            reason=batch.reason,
-            batch_size=len(items),
-            dispatches=sum(r.dispatches for r in results),
-            nnz_real=sum(it.coo.nnz for it in items),
-            nnz_padded=sum(r.timing.nnz_padded for r in results),
-            execute_ms=execute_ms,
-            queue_ms=queue_ms,
-            total_ms=total_ms,
-        )
-        for it, res in zip(items, results):
-            it.ticket._set_result(res)
+            for it, res in zip(items, results):
+                with _obs_span(
+                    "serve.split", ticket=it.ticket.ticket_id,
+                    queue_ms=res.timing.queue_ms,
+                    total_ms=res.timing.total_ms,
+                    nnz=int(it.coo.nnz),
+                ):
+                    it.ticket._set_result(res)
 
     # -- plan-cache eviction observation ------------------------------------
 

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 import warnings
 from collections import OrderedDict
 from typing import Any, Callable, List, Optional, Sequence, Tuple
@@ -31,6 +32,10 @@ import numpy as np
 from repro.core import hooi as _hooi
 from repro.core.coo import SparseCOO
 from repro.core.engine import SweepEngine, resolve_engine
+from repro.obs import event as _obs_event
+from repro.obs import registry as _obs_registry
+from repro.obs import span as _obs_span
+from repro.obs import tracer as _obs_tracer
 from repro.sparse.layout import pad_coo_batch
 from repro.tucker.result import TuckerResult
 from repro.tucker.spec import TuckerSpec, spec_for
@@ -85,6 +90,32 @@ def mesh_fingerprint(mesh: Any) -> str:
 
 def _total_traces() -> int:
     return sum(_hooi.SWEEP_TRACE_COUNTS.values())
+
+
+# plan-cache counters, registered at their source (every PlanCache instance
+# reports into the same family — in practice the process-global _PLAN_CACHE).
+_MX_PLAN_HITS = _obs_registry.counter(
+    "repro_plan_cache_hits_total", "plan cache hits"
+)
+_MX_PLAN_MISSES = _obs_registry.counter(
+    "repro_plan_cache_misses_total", "plan cache misses (plan builds)"
+)
+_MX_PLAN_EVICTIONS = _obs_registry.counter(
+    "repro_plan_cache_evictions_total", "plan cache LRU evictions"
+)
+_MX_SNAPSHOTS = _obs_registry.counter(
+    "repro_snapshots_written_total", "sweep-carry snapshots spilled to disk"
+)
+
+
+def _attach_trace_summary(results: Any, root_span: Any) -> None:
+    """Per-stage milliseconds for everything under this call's root span —
+    only when tracing is live (the disabled path must stay free)."""
+    if root_span.span_id < 0:  # the shared no-op span: tracing disabled
+        return
+    summary = _obs_tracer.subtree_summary(root_span.span_id)
+    for res in results if isinstance(results, list) else [results]:
+        res.trace_summary = dict(summary)
 
 
 _DEFAULT_NP_KEY: Optional[np.ndarray] = None
@@ -319,7 +350,10 @@ class TuckerPlan:
         :class:`~repro.runtime.fault_tolerance.FailureInjector` consulted at
         every segment boundary, inside the retry wrapper.
         """
-        with self._exec_lock:
+        with self._exec_lock, _obs_span(
+            "plan.call", algorithm=self.spec.algorithm,
+            shape=list(self.spec.shape), ranks=list(self.spec.ranks),
+        ) as sp:
             self.stats.calls += 1
             if self.spec.algorithm != "sparse" and (
                 resume_from is not None or injector is not None
@@ -329,12 +363,16 @@ class TuckerPlan:
                     "snapshot=SnapshotSpec(...)"
                 )
             if self.spec.algorithm == "dense":
-                return self._run_dense(x, key, factors_init)
-            coo = self._check_sparse_input(x)
-            if self.spec.algorithm == "complete":
-                return self._run_complete(coo, key, factors_init)
-            return self._run_sparse(coo, key, factors_init, pad_nnz_to,
-                                    resume_from, injector)
+                res = self._run_dense(x, key, factors_init)
+            else:
+                coo = self._check_sparse_input(x)
+                if self.spec.algorithm == "complete":
+                    res = self._run_complete(coo, key, factors_init)
+                else:
+                    res = self._run_sparse(coo, key, factors_init, pad_nnz_to,
+                                           resume_from, injector)
+            _attach_trace_summary(res, sp)
+            return res
 
     def batch(
         self,
@@ -393,17 +431,23 @@ class TuckerPlan:
                 f"all-zero tensor has no defined Tucker fit (relative error "
                 f"is 0/0) — filter empties out before submitting"
             )
-        with self._exec_lock:  # reentrant: the fallback loop re-enters __call__
+        with self._exec_lock, _obs_span(
+            "plan.batch", size=len(coos),
+            vmapped=self.batch_is_vmappable(keys),
+        ) as sp:  # reentrant: the fallback loop re-enters __call__
             if not self.batch_is_vmappable(keys):
                 # stabilize the shard_map program's nnz shape across the
                 # flush: explicit-zero padding changes no contraction, and
                 # passing the target (instead of pre-padding the tensor)
                 # keeps the shard-imbalance counters on the real nonzeros
                 pad = pad_nnz_to if self.spec.shard is not None else None
-                return [self(c, key=k, pad_nnz_to=pad)
-                        for c, k in zip(coos, keys)]
-            self.stats.calls += len(coos)  # same meaning as the fallback
-            return self._run_sparse_vmapped(coos, keys, pad_nnz_to)
+                results = [self(c, key=k, pad_nnz_to=pad)
+                           for c, k in zip(coos, keys)]
+            else:
+                self.stats.calls += len(coos)  # same meaning as the fallback
+                results = self._run_sparse_vmapped(coos, keys, pad_nnz_to)
+                _attach_trace_summary(results, sp)
+            return results
 
     # -- input validation ---------------------------------------------------
 
@@ -507,7 +551,9 @@ class TuckerPlan:
         coo = self._check_sparse_input(x)
         ndim = coo.ndim
         work_dtype = jnp.promote_types(coo.values.dtype, jnp.float32)
-        with self._exec_lock:
+        with self._exec_lock, _obs_span(
+            "plan.lower", engine=eng.name, sharded=spec.shard is not None
+        ):
             self._maybe_autotune(coo)
             factors = self._init_factors(None, None)
             xnorm2 = jnp.square(coo.norm())
@@ -515,7 +561,7 @@ class TuckerPlan:
             if spec.shard is not None:
                 sched = eng.shard_schedule(coo, self.mesh, self._nnz_axes)
                 if spec.snapshot is not None:
-                    seg = spec.snapshot.every_n_sweeps
+                    seg = spec.snapshot.segment_len
                     prog = _hooi.build_sharded_program(
                         self.mesh, self._nnz_axes,
                         shape=spec.shape, ranks=spec.ranks,
@@ -561,7 +607,7 @@ class TuckerPlan:
                     fuse_core=eng.fuse_core and eng.name == "pallas",
                 )
                 if spec.snapshot is not None:
-                    seg = spec.snapshot.every_n_sweeps
+                    seg = spec.snapshot.segment_len
                     core = jnp.zeros(tuple(spec.ranks), dtype=work_dtype)
                     lowered = _hooi._segment_scan_sweeps.lower(
                         coo.indices, coo.values, tuple(factors), core,
@@ -579,7 +625,8 @@ class TuckerPlan:
                     kind, n_sweeps = "scan", spec.n_iter
                     # donate_argnames=("factors",): parameters 2..2+ndim-1.
                     donated = tuple(range(2, 2 + ndim))
-            text = lowered.compile().as_text()
+            with _obs_span("plan.compile", kind=kind):
+                text = lowered.compile().as_text()
         meta = {
             "kind": kind,
             "ndim": ndim,
@@ -640,6 +687,88 @@ class TuckerPlan:
 
         return analysis.lint_plan(self, x, baseline=baseline)
 
+    def lower_batch_hlo(
+        self,
+        coos: Sequence[SparseCOO],
+        keys: Any = None,
+        pad_nnz_to: Optional[int] = None,
+    ) -> Tuple[str, dict]:
+        """Lower (without executing) the vmapped batched program
+        :meth:`batch` dispatches on these members — the serving plane's ONE
+        flush dispatch — and return ``(optimized HLO text, metadata)``.
+
+        The batched program has its own contract surface, distinct from
+        :meth:`lower_hlo`'s per-tensor pipelines: it donates NOTHING (the
+        member tensors and PRNG keys are caller-owned buffers a flush must
+        not consume — ``donated_params=()`` is the contract, not an
+        omission), and its init/norm preamble is fused into the dispatch.
+        Raises on plans whose ``batch()`` runs the sequential fallback:
+        there is no shared program to lower — lint the per-member program
+        with :meth:`lower_hlo`/:meth:`lint` instead.
+        """
+        spec = self.spec
+        if spec.algorithm != "sparse":
+            raise ValueError("lower_batch_hlo() supports sparse plans only")
+        coos = [self._check_sparse_input(c) for c in coos]
+        if not coos:
+            raise ValueError(
+                "lower_batch_hlo() needs at least one member tensor"
+            )
+        if keys is None:
+            keys = [None] * len(coos)
+        keys = list(keys)
+        if len(keys) != len(coos):
+            raise ValueError(f"got {len(keys)} keys for {len(coos)} tensors")
+        if not self.batch_is_vmappable(keys):
+            eng = self.engine.name if self.engine is not None else None
+            raise ValueError(
+                f"this plan's batch() runs the sequential fallback "
+                f"(engine={eng!r}, pipeline={spec.pipeline!r}, "
+                f"use_kron_reuse={spec.use_kron_reuse}, "
+                f"shard={spec.shard is not None}, or non-vmappable keys) — "
+                "there is no shared batched program to lower; lint the "
+                "per-member program with lower_hlo()/lint() instead"
+            )
+        with self._exec_lock, _obs_span(
+            "plan.lower", engine="xla", sharded=False, batch=len(coos)
+        ):
+            idx, val = pad_coo_batch(coos, target_nnz=pad_nnz_to)
+            jkeys = _stack_keys(keys)
+            lowered = _hooi._batched_scan_sweeps.lower(
+                idx, val, jkeys, jnp.float32(spec.tol),
+                shape=spec.shape, ranks=spec.ranks, method=spec.method,
+                n_iter=spec.n_iter, dtype=spec.resolved_dtype(),
+            )
+            with _obs_span("plan.compile", kind="batched"):
+                text = lowered.compile().as_text()
+        work_dtype = jnp.promote_types(coos[0].values.dtype, jnp.float32)
+        meta = {
+            "kind": "batched",
+            "ndim": coos[0].ndim,
+            "batch": len(coos),
+            "padded_nnz": int(idx.shape[1]),
+            "n_sweeps": spec.n_iter,
+            "donated_params": (),
+            "precision": "fp32",  # spec.supports_batched_dispatch enforces it
+            "sharded": False,
+            "engine": "xla",
+            "working_dtype": str(jnp.dtype(work_dtype)),
+        }
+        return text, meta
+
+    def lint_batch(
+        self, coos: Sequence[SparseCOO], keys: Any = None,
+        baseline: Any = None,
+    ) -> list:
+        """:meth:`lint` for the vmapped batched program: transfer (HLO and
+        jaxpr), donation (nothing may alias — the flush must not consume
+        caller buffers), and precision contracts on the exact program
+        ``batch()`` would dispatch for these members."""
+        from repro import analysis
+
+        return analysis.lint_batch_plan(self, coos, keys=keys,
+                                        baseline=baseline)
+
     # -- sparse (paper Alg. 2) ---------------------------------------------
 
     def _run_sparse(self, coo: SparseCOO, key: Any, factors_init: Any,
@@ -686,10 +815,13 @@ class TuckerPlan:
         spec, eng, snap = self.spec, self.engine, self.spec.snapshot
         state = None
         if resume_from is not None:
-            state = (
-                resume_from if isinstance(resume_from, _snap.SnapshotState)
-                else _snap.load_snapshot(str(resume_from))
-            )
+            if isinstance(resume_from, _snap.SnapshotState):
+                state = resume_from
+            else:
+                with _obs_span("resume.restore",
+                               directory=str(resume_from)) as rsp:
+                    state = _snap.load_snapshot(str(resume_from))
+                    rsp.set_attr("sweeps_done", int(state.sweeps_done))
             _snap.check_compatible(spec, state)
 
         # the relative error always normalizes by the REAL tensor norm,
@@ -725,7 +857,7 @@ class TuckerPlan:
         snapshots_written = 0
         builds0 = eng.schedule_builds
         traces0 = _total_traces()
-        segment_len = snap.every_n_sweeps
+        segment_len = snap.segment_len
         total_sweeps = jnp.int32(spec.n_iter)
         tol = jnp.float32(spec.tol)
 
@@ -779,17 +911,28 @@ class TuckerPlan:
                 _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
                 return out
 
-        def save(step: Any) -> None:
-            nonlocal snapshots_written
-            _snap.save_snapshot(
-                mgr, spec, factors=factors, core=core, prev_err=prev_err,
-                done=done, sweeps_done=step, fit_history=hist,
-                mesh_fp=mesh_fp,
-            )
+        last_spill = time.monotonic()
+
+        def save(step: Any, decision: str) -> None:
+            # ``decision`` names why this boundary spilled — "initial",
+            # "interval" (sweep-count cadence), "wall-clock"
+            # (every_seconds elapsed), or "final" — and rides on the span
+            # so heterogeneous-fleet cadence is visible in traces.
+            nonlocal snapshots_written, last_spill
+            with _obs_span("snapshot.spill", step=int(step),
+                           decision=decision):
+                _snap.save_snapshot(
+                    mgr, spec, factors=factors, core=core, prev_err=prev_err,
+                    done=done, sweeps_done=step, fit_history=hist,
+                    mesh_fp=mesh_fp,
+                )
+            _MX_SNAPSHOTS.inc()
             snapshots_written += 1
+            last_spill = time.monotonic()
 
         if state is None:
-            save(0)  # a kill at ANY later boundary finds a resumable job
+            # a kill at ANY later boundary finds a resumable job
+            save(0, "initial")
 
         while n_done < spec.n_iter and not done:
 
@@ -802,22 +945,43 @@ class TuckerPlan:
                     injector.maybe_fail(n_done)
                 return dispatch()
 
-            fs, core_d, hist_dev, carry = run_with_retries(
-                step, ft, on_retry=on_retry
-            )
-            dispatches += 1
-            factors, core = list(fs), core_d
-            prev_err_d, done_d, n_done_d = carry
-            seg_hist = np.asarray(_hooi._fetch_history(hist_dev))
-            hist.extend(float(h) for h in seg_hist[seg_hist != _hooi._SKIPPED])
-            # the one host sync per segment (the snapshot layer's overhead):
-            # the carry scalars decide loop exit and ride into the manifest.
-            prev_err, done, n_done = (
-                float(np.asarray(prev_err_d)),
-                bool(np.asarray(done_d)),
-                int(np.asarray(n_done_d)),
-            )
-            save(n_done)
+            with _obs_span(
+                "sweep.dispatch", program="segment",
+                engine="sharded" if spec.shard is not None else eng.name,
+                segment_len=segment_len, sweeps_done=n_done,
+            ) as dsp:
+                fs, core_d, hist_dev, carry = run_with_retries(
+                    step, ft, on_retry=on_retry
+                )
+                dispatches += 1
+                factors, core = list(fs), core_d
+                prev_err_d, done_d, n_done_d = carry
+                seg_hist = np.asarray(_hooi._fetch_history(hist_dev))
+                hist.extend(
+                    float(h) for h in seg_hist[seg_hist != _hooi._SKIPPED]
+                )
+                # the one host sync per segment (the snapshot layer's
+                # overhead): the carry scalars decide loop exit and ride
+                # into the manifest.
+                prev_err, done, n_done = (
+                    float(np.asarray(prev_err_d)),
+                    bool(np.asarray(done_d)),
+                    int(np.asarray(n_done_d)),
+                )
+                dsp.set_attr("sweeps_run", n_done)
+            if done or n_done >= spec.n_iter:
+                save(n_done, "final")
+            elif snap.every_seconds is None:
+                save(n_done, "interval")
+            elif time.monotonic() - last_spill >= snap.every_seconds:
+                save(n_done, "wall-clock")
+            else:
+                # boundary reached but the wall-clock interval has not
+                # elapsed: skip the write (the final boundary always spills)
+                _obs_event(
+                    "snapshot.skip", step=n_done, decision="wall-clock",
+                    elapsed_s=time.monotonic() - last_spill,
+                )
 
         res = self._result(
             core, list(factors), np.asarray(hist, dtype=np.float32),
@@ -856,13 +1020,22 @@ class TuckerPlan:
                 n_iter=spec.n_iter,
             )
         traces0 = _total_traces()
-        fs, core, hist_dev = self._sharded_program(
-            sched.indices, sched.values, tuple(factors), xnorm2,
-            jnp.float32(spec.tol),
+        coll_bytes = psum_bytes_per_sweep(
+            spec.shape, spec.ranks,
+            # the psum payload runs at the program's working precision
+            dtype=jnp.promote_types(coo.values.dtype, jnp.float32),
         )
-        _hooi.SWEEP_DISPATCH_COUNTS[("sharded", "scan")] += 1
-        hist = np.asarray(_hooi._fetch_history(hist_dev))  # the one d2h transfer
-        n_done = int(np.sum(hist != _hooi._SKIPPED))
+        with _obs_span("sweep.dispatch", program="sharded", engine=eng.name,
+                       collective_bytes_per_sweep=int(coll_bytes)) as dsp:
+            fs, core, hist_dev = self._sharded_program(
+                sched.indices, sched.values, tuple(factors), xnorm2,
+                jnp.float32(spec.tol),
+            )
+            _hooi.SWEEP_DISPATCH_COUNTS[("sharded", "scan")] += 1
+            hist = np.asarray(_hooi._fetch_history(hist_dev))  # the one d2h transfer
+            n_done = int(np.sum(hist != _hooi._SKIPPED))
+            dsp.set_attr("sweeps_run", n_done)
+            dsp.set_attr("retraces", _total_traces() - traces0)
         res = self._result(
             core, list(fs), hist[:n_done],
             engine=eng.name,
@@ -870,11 +1043,7 @@ class TuckerPlan:
             retraces=_total_traces() - traces0,
             schedule_builds=eng.schedule_builds - builds0,
         )
-        res.collective_bytes_per_sweep = psum_bytes_per_sweep(
-            spec.shape, spec.ranks,
-            # the psum payload runs at the program's working precision
-            dtype=jnp.promote_types(coo.values.dtype, jnp.float32),
-        )
+        res.collective_bytes_per_sweep = coll_bytes
         res.shard_imbalance = sched.imbalance
         return res
 
@@ -884,28 +1053,32 @@ class TuckerPlan:
         builds0 = eng.schedule_builds
         scheds = tuple(eng.device_schedule(coo, m) for m in range(coo.ndim))
         traces0 = _total_traces()
-        fs, core, hist_dev = _hooi._scan_sweeps(
-            coo.indices,
-            coo.values,
-            tuple(factors),
-            xnorm2,
-            jnp.float32(spec.tol),
-            scheds,
-            shape=spec.shape,
-            ranks=spec.ranks,
-            method=spec.method,
-            n_iter=spec.n_iter,
-            engine_name=eng.name,
-            interpret=eng.resolved_interpret() if eng.name == "pallas" else False,
-            use_reuse=use_reuse,
-            precision=eng.precision,
-            bl=eng.bl,
-            bk=eng.bk,
-            fuse_core=eng.fuse_core and eng.name == "pallas",
-        )
-        _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
-        hist = np.asarray(_hooi._fetch_history(hist_dev))  # the one d2h transfer
-        n_done = int(np.sum(hist != _hooi._SKIPPED))
+        with _obs_span("sweep.dispatch", program="scan",
+                       engine=eng.name, nnz=int(coo.nnz)) as dsp:
+            fs, core, hist_dev = _hooi._scan_sweeps(
+                coo.indices,
+                coo.values,
+                tuple(factors),
+                xnorm2,
+                jnp.float32(spec.tol),
+                scheds,
+                shape=spec.shape,
+                ranks=spec.ranks,
+                method=spec.method,
+                n_iter=spec.n_iter,
+                engine_name=eng.name,
+                interpret=eng.resolved_interpret() if eng.name == "pallas" else False,
+                use_reuse=use_reuse,
+                precision=eng.precision,
+                bl=eng.bl,
+                bk=eng.bk,
+                fuse_core=eng.fuse_core and eng.name == "pallas",
+            )
+            _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
+            hist = np.asarray(_hooi._fetch_history(hist_dev))  # the one d2h transfer
+            n_done = int(np.sum(hist != _hooi._SKIPPED))
+            dsp.set_attr("sweeps_run", n_done)
+            dsp.set_attr("retraces", _total_traces() - traces0)
         return self._result(
             core, list(fs), hist[:n_done],
             engine=eng.name,
@@ -923,18 +1096,20 @@ class TuckerPlan:
         core = None
         dispatches = 0
         for _ in range(spec.n_iter):
-            if eng.name == "xla" and not eng.use_kron_reuse:
-                fs, core = _hooi._jitted_sweep(
-                    coo.indices, coo.values, tuple(factors),
-                    shape=spec.shape, ranks=spec.ranks, method=spec.method,
-                )
-                factors = list(fs)
-            else:
-                factors, core = _hooi.sparse_sweep(
-                    coo, factors, spec.ranks, spec.method, engine=eng
-                )
-            _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "python")] += 1
-            dispatches += 1
+            with _obs_span("sweep.dispatch", program="python",
+                           engine=eng.name):
+                if eng.name == "xla" and not eng.use_kron_reuse:
+                    fs, core = _hooi._jitted_sweep(
+                        coo.indices, coo.values, tuple(factors),
+                        shape=spec.shape, ranks=spec.ranks, method=spec.method,
+                    )
+                    factors = list(fs)
+                else:
+                    factors, core = _hooi.sparse_sweep(
+                        coo, factors, spec.ranks, spec.method, engine=eng
+                    )
+                _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "python")] += 1
+                dispatches += 1
             err = jnp.sqrt(
                 jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)
             ) / jnp.sqrt(xnorm2)
@@ -955,18 +1130,21 @@ class TuckerPlan:
         idx, val = pad_coo_batch(coos, target_nnz=pad_nnz_to)
         jkeys = _stack_keys(keys)
         traces0 = _total_traces()
-        # init + norm + all sweeps for all k tensors: ONE fused XLA dispatch
-        cores, factors, hist_dev = _hooi._batched_scan_sweeps(
-            idx, val, jkeys, jnp.float32(spec.tol),
-            shape=spec.shape,
-            ranks=spec.ranks,
-            method=spec.method,
-            n_iter=spec.n_iter,
-            dtype=spec.resolved_dtype(),
-        )
-        _hooi.SWEEP_DISPATCH_COUNTS[("xla", "scan")] += 1
-        hists = np.asarray(_hooi._fetch_history(hist_dev))  # (k, n_iter)
-        retraces = _total_traces() - traces0
+        with _obs_span("sweep.dispatch", program="batched", engine="xla",
+                       batch=len(coos), padded_nnz=int(idx.shape[1])) as dsp:
+            # init + norm + all sweeps for all k tensors: ONE fused dispatch
+            cores, factors, hist_dev = _hooi._batched_scan_sweeps(
+                idx, val, jkeys, jnp.float32(spec.tol),
+                shape=spec.shape,
+                ranks=spec.ranks,
+                method=spec.method,
+                n_iter=spec.n_iter,
+                dtype=spec.resolved_dtype(),
+            )
+            _hooi.SWEEP_DISPATCH_COUNTS[("xla", "scan")] += 1
+            hists = np.asarray(_hooi._fetch_history(hist_dev))  # (k, n_iter)
+            retraces = _total_traces() - traces0
+            dsp.set_attr("retraces", retraces)
         results = []
         for i in range(len(coos)):
             hist = hists[i]
@@ -1116,21 +1294,30 @@ class PlanCache:
             if cached is not None:
                 self._entries.move_to_end(key)
                 self.hits += 1
+                _MX_PLAN_HITS.inc()
+                _obs_event("plan.cache.lookup", hit=True)
                 return cached
-        built = factory()
+        with _obs_span("plan.cache.build"):
+            built = factory()
         evicted = []
         with self._lock:
             cached = self._entries.get(key)
             if cached is not None:  # lost the build race: share the winner
                 self._entries.move_to_end(key)
                 self.hits += 1
+                _MX_PLAN_HITS.inc()
+                _obs_event("plan.cache.lookup", hit=True, lost_race=True)
                 return cached
             self.misses += 1
+            _MX_PLAN_MISSES.inc()
+            _obs_event("plan.cache.lookup", hit=False)
             self._entries[key] = built
             while self._capacity is not None and len(self._entries) > self._capacity:
                 evicted.append(self._entries.popitem(last=False))
                 self.evictions += 1
+                _MX_PLAN_EVICTIONS.inc()
         for k, p in evicted:
+            _obs_event("plan.cache.evict")
             self._fire_hooks(k, p)
         return built
 
@@ -1146,6 +1333,7 @@ class PlanCache:
             while self._capacity is not None and len(self._entries) > self._capacity:
                 evicted.append(self._entries.popitem(last=False))
                 self.evictions += 1
+                _MX_PLAN_EVICTIONS.inc()
         for k, p in evicted:
             self._fire_hooks(k, p)
 
@@ -1286,7 +1474,9 @@ def resume(spec: TuckerSpec, x: Any, directory: Optional[str] = None, *,
             "resume() requires a spec with snapshot=SnapshotSpec(...)"
         )
     directory = directory if directory is not None else spec.snapshot.directory
-    state = _snap.load_snapshot(directory)
+    with _obs_span("resume.restore", directory=str(directory)) as rsp:
+        state = _snap.load_snapshot(directory)
+        rsp.set_attr("sweeps_done", int(state.sweeps_done))
     _snap.check_compatible(spec, state)
     if spec.shard is not None and mesh is None:
         n_avail = len(jax.devices())

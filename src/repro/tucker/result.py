@@ -94,6 +94,11 @@ class TuckerResult(HooiResult):
       tuned_blocks: the autotuned kernel block shapes
         (:class:`repro.kernels.autotune.BlockConfig`) the plan applied
         before this call, or ``None`` when no autotuning ran.
+      trace_summary: per-stage milliseconds of this call — span name ->
+        total ms over the call's span subtree (``repro.obs``). ``None``
+        unless tracing was enabled (``repro.obs.configure(enabled=True)``)
+        when the call ran. Batched dispatches attach the whole batch's
+        summary to every member result.
     """
 
     spec: Optional["TuckerSpec"] = None
@@ -109,6 +114,7 @@ class TuckerResult(HooiResult):
     retries: int = 0
     precision: str = "fp32"
     tuned_blocks: Optional[tuple] = None
+    trace_summary: Optional[dict] = None
 
     @property
     def n_sweeps(self) -> int:

@@ -78,7 +78,14 @@ def _spec_meta(spec: Any) -> Dict:
         "tol": float(spec.tol),
         "dtype": spec.dtype,
         "every_n_sweeps": (
-            int(spec.snapshot.every_n_sweeps) if spec.snapshot else None
+            int(spec.snapshot.every_n_sweeps)
+            if spec.snapshot and spec.snapshot.every_n_sweeps is not None
+            else None
+        ),
+        "every_seconds": (
+            float(spec.snapshot.every_seconds)
+            if spec.snapshot and spec.snapshot.every_seconds is not None
+            else None
         ),
     }
 

@@ -84,10 +84,24 @@ class SnapshotSpec:
     only in ``directory`` share the same jit cache (the program is keyed on
     shapes and statics, not paths).
 
+    Cadence is sweep-count based (``every_n_sweeps``), wall-clock based
+    (``every_seconds``), or both: with ``every_seconds`` the segment loop
+    still runs sweep-granular segments (``segment_len`` sweeps each — the
+    compiled program cannot be interrupted mid-sweep) but only *writes* a
+    checkpoint when the interval has elapsed since the last write, so a slow
+    host and a fast host on the same spec checkpoint at comparable wall-clock
+    cadence instead of comparable sweep counts. The initial (step-0) and
+    final snapshots are always written — a kill at any boundary stays
+    resumable, and the finished state is always durable. At least one of the
+    two cadences must be set.
+
     Attributes:
-      every_n_sweeps: sweeps per segment (the snapshot interval).
+      every_n_sweeps: sweeps per segment (the sweep-count snapshot
+        interval), or None for a purely wall-clock cadence.
       directory: checkpoint root, one job per directory — concurrent jobs
         snapshotting into one directory would interleave step sequences.
+      every_seconds: minimum seconds between checkpoint writes, or None for
+        a purely sweep-count cadence. 0.0 writes at every segment boundary.
       keep: snapshots retained (older ones are GC'd), per CheckpointManager.
       max_retries: transient-failure retries per segment dispatch
         (``runtime.fault_tolerance.run_with_retries``); 0 = fail fast and
@@ -95,16 +109,35 @@ class SnapshotSpec:
       retry_backoff_s: base of the exponential retry backoff.
     """
 
-    every_n_sweeps: int
-    directory: str
+    every_n_sweeps: Optional[int] = None
+    directory: str = ""
+    every_seconds: Optional[float] = None
     keep: int = 3
     max_retries: int = 0
     retry_backoff_s: float = 0.05
 
+    @property
+    def segment_len(self) -> int:
+        """Sweeps per compiled segment dispatch: ``every_n_sweeps`` when
+        set, else 1 (wall-clock cadence decides per boundary whether the
+        carry actually spills)."""
+        return self.every_n_sweeps if self.every_n_sweeps is not None else 1
+
     def __post_init__(self) -> None:
-        if int(self.every_n_sweeps) < 1:
+        if self.every_n_sweeps is None and self.every_seconds is None:
+            raise ValueError(
+                "SnapshotSpec needs a cadence: set every_n_sweeps, "
+                "every_seconds, or both"
+            )
+        if self.every_n_sweeps is not None and int(self.every_n_sweeps) < 1:
             raise ValueError(
                 f"every_n_sweeps must be >= 1, got {self.every_n_sweeps}"
+            )
+        if self.every_seconds is not None and not (
+            float(self.every_seconds) >= 0.0  # also rejects NaN
+        ):
+            raise ValueError(
+                f"every_seconds must be >= 0, got {self.every_seconds}"
             )
         if not self.directory or not isinstance(self.directory, str):
             raise ValueError(
@@ -120,7 +153,12 @@ class SnapshotSpec:
             raise ValueError(
                 f"retry_backoff_s must be >= 0, got {self.retry_backoff_s}"
             )
-        object.__setattr__(self, "every_n_sweeps", int(self.every_n_sweeps))
+        if self.every_n_sweeps is not None:
+            object.__setattr__(
+                self, "every_n_sweeps", int(self.every_n_sweeps)
+            )
+        if self.every_seconds is not None:
+            object.__setattr__(self, "every_seconds", float(self.every_seconds))
         object.__setattr__(self, "keep", int(self.keep))
         object.__setattr__(self, "max_retries", int(self.max_retries))
         object.__setattr__(

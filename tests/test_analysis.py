@@ -341,6 +341,39 @@ def test_snapshot_segment_plan_lint_and_analyze(coo, tmp_path):
     assert meta["donated_params"] == ()
 
 
+def test_batched_plan_lints_clean(xla_plan):
+    """The vmapped batch() program holds the same transfer/precision
+    contracts as the per-tensor pipeline, and donates nothing (caller-owned
+    member/key buffers)."""
+    coos = [
+        random_sparse_tensor(SHAPE, 0.06 * (1 + i), seed=40 + i)
+        for i in range(3)
+    ]
+    assert xla_plan.lint_batch(coos) == []
+    text, meta = xla_plan.lower_batch_hlo(coos)
+    assert meta["kind"] == "batched"
+    assert meta["batch"] == 3
+    assert meta["donated_params"] == ()
+    # mixed-nnz members lower at the padded batch max
+    assert meta["padded_nnz"] == max(c.nnz for c in coos)
+
+
+def test_batched_lint_rejects_fallback_plans(coo):
+    plan = TuckerPlan(
+        TuckerSpec(
+            shape=SHAPE, ranks=RANKS, method="gram", engine="pallas", n_iter=2
+        )
+    )
+    with pytest.raises(ValueError, match="sequential fallback"):
+        plan.lower_batch_hlo([coo, coo])
+
+
+def test_batched_cell_in_default_matrix():
+    cells = {c.name: c for c in analysis.default_matrix()}
+    assert "xla/batched/fp32" in cells
+    assert cells["xla/batched/fp32"].batch > 0
+
+
 def test_python_pipeline_has_no_program(coo):
     plan = TuckerPlan(
         TuckerSpec(

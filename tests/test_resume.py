@@ -79,6 +79,85 @@ def test_snapshot_spec_validation():
         tucker.SnapshotSpec(every_n_sweeps=1, directory="d", max_retries=-1)
 
 
+def test_snapshot_spec_wall_clock_cadence_validation():
+    from repro import tucker
+
+    with pytest.raises(ValueError, match="cadence"):
+        tucker.SnapshotSpec(directory="d")  # neither cadence set
+    with pytest.raises(ValueError, match="every_seconds"):
+        tucker.SnapshotSpec(every_seconds=-1.0, directory="d")
+    with pytest.raises(ValueError, match="every_seconds"):
+        tucker.SnapshotSpec(every_seconds=float("nan"), directory="d")
+    # wall-clock-only cadence: segments fall back to single sweeps
+    snap = tucker.SnapshotSpec(every_seconds=30.0, directory="d")
+    assert snap.every_n_sweeps is None and snap.segment_len == 1
+    # both cadences compose
+    both = tucker.SnapshotSpec(every_n_sweeps=3, every_seconds=1.5,
+                               directory="d")
+    assert both.segment_len == 3 and both.every_seconds == 1.5
+
+
+def test_wall_clock_cadence_gates_interval_spills(tmp_path):
+    """every_seconds gates the per-boundary writes: a huge interval writes
+    only the initial and final snapshots; interval 0.0 writes every
+    boundary. The final state is identical either way — the cadence only
+    decides which intermediate boundaries spill."""
+    from repro import tucker
+
+    def run(sub, **snap_kw):
+        spec = tucker.TuckerSpec(
+            shape=SHAPE, ranks=RANKS, method="gram", engine="xla",
+            n_iter=4, tol=0.0,
+            snapshot=tucker.SnapshotSpec(
+                directory=str(tmp_path / sub), **snap_kw
+            ),
+        )
+        return tucker.plan(spec)(_coo())
+
+    sparse_res = run("sparse", every_n_sweeps=1, every_seconds=1e9)
+    assert sparse_res.n_sweeps == 4
+    assert sparse_res.snapshots_written == 2  # step-0 initial + final only
+
+    dense_res = run("dense", every_n_sweeps=1, every_seconds=0.0)
+    assert dense_res.snapshots_written == 5  # initial + all 4 boundaries
+    np.testing.assert_allclose(
+        sparse_res.fit_history, dense_res.fit_history, atol=1e-6
+    )
+
+    # the final snapshot is a valid resume point even when every
+    # intermediate boundary was skipped
+    state = tucker.load_snapshot(str(tmp_path / "sparse"))
+    assert state.sweeps_done == 4
+    assert state.meta["spec"]["every_seconds"] == 1e9
+
+
+def test_wall_clock_skip_decisions_traced(tmp_path):
+    """Skipped boundaries surface as snapshot.skip events and spills carry
+    their decision ('initial'/'wall-clock'/'final') as a span attribute."""
+    import repro.obs as obs
+    from repro import tucker
+
+    obs.configure(enabled=True)
+    try:
+        spec = tucker.TuckerSpec(
+            shape=SHAPE, ranks=RANKS, method="gram", engine="xla",
+            n_iter=3, tol=0.0,
+            snapshot=tucker.SnapshotSpec(
+                every_n_sweeps=1, every_seconds=1e9,
+                directory=str(tmp_path),
+            ),
+        )
+        tucker.plan(spec)(_coo())
+        evs = obs.tracer.events()
+        spills = [e for e in evs if e.name == "snapshot.spill"]
+        skips = [e for e in evs if e.name == "snapshot.skip"]
+        assert [s.attrs["decision"] for s in spills] == ["initial", "final"]
+        assert len(skips) == 2  # boundaries 1 and 2 skipped
+        assert all(s.attrs["decision"] == "wall-clock" for s in skips)
+    finally:
+        obs.configure(enabled=False)
+
+
 def test_tucker_spec_snapshot_constraints(tmp_path):
     from repro import tucker
 
