@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import warnings
 from functools import partial
 from typing import List, Optional, Sequence, Tuple, Union
@@ -51,12 +52,23 @@ class _MirroredCounter(collections.Counter):
     def __init__(self, metric_name: str, help: str) -> None:
         super().__init__()
         self._metric = _obs_registry.counter(metric_name, help)
+        self._count_lock = threading.Lock()
+
+    def tick(self, key, n: int = 1) -> None:
+        """Atomic increment. Concurrent flush executors (repro.serve) bump
+        these counters from several threads; a bare ``counter[k] += 1`` is a
+        read-modify-write that can lose increments under that interleaving,
+        and the dispatch-count CI gates would misreport."""
+        with self._count_lock:
+            dict.__setitem__(self, key, self.get(key, 0) + n)
+        self._metric.inc(n)
 
     def __setitem__(self, key, value) -> None:
-        delta = value - self.get(key, 0)
-        if delta > 0:
-            self._metric.inc(delta)
-        super().__setitem__(key, value)
+        with self._count_lock:
+            delta = value - self.get(key, 0)
+            if delta > 0:
+                self._metric.inc(delta)
+            dict.__setitem__(self, key, value)
 
 # -- instrumentation ---------------------------------------------------------
 # SWEEP_TRACE_COUNTS ticks once per *trace* of the compiled sweep pipeline
@@ -407,7 +419,7 @@ def _scan_sweeps_impl(
     fuse_core=False,
 ):
     # trace-time only: cache hits never reach this line.
-    SWEEP_TRACE_COUNTS[(engine_name, shape, tuple(ranks), method, n_iter)] += 1
+    SWEEP_TRACE_COUNTS.tick((engine_name, shape, tuple(ranks), method, n_iter))
 
     mode_unfolding, core_unfolding = _engine_unfoldings(
         indices, values, scheds,
@@ -467,9 +479,7 @@ def _segment_scan_sweeps_impl(
     short final one and any resume offset included (the no-retrace contract
     the snapshot layer keeps)."""
     # trace-time only: cache hits never reach this line.
-    SWEEP_TRACE_COUNTS[
-        (engine_name, shape, tuple(ranks), method, "segment", segment_len)
-    ] += 1
+    SWEEP_TRACE_COUNTS.tick((engine_name, shape, tuple(ranks), method, "segment", segment_len))
 
     mode_unfolding, core_unfolding = _engine_unfoldings(
         indices, values, scheds,
@@ -628,10 +638,8 @@ def build_sharded_program(mesh, nnz_axes, *, shape, ranks, method, n_iter,
                    prev_err, done, n_done, total_sweeps):
             # trace-time only (outside the shard_map body, which jax may
             # trace more than once per build): cache hits never reach here.
-            SWEEP_TRACE_COUNTS[
-                ("sharded", shape, ranks, method, "segment", int(n_iter),
-                 n_shards)
-            ] += 1
+            SWEEP_TRACE_COUNTS.tick(("sharded", shape, ranks, method, "segment", int(n_iter),
+                 n_shards))
             return inner(indices, values, factors, core, xnorm2, tol,
                          prev_err, done, n_done, total_sweeps)
 
@@ -666,9 +674,7 @@ def build_sharded_program(mesh, nnz_axes, *, shape, ranks, method, n_iter,
     def traced(indices, values, factors, xnorm2, tol):
         # trace-time only (outside the shard_map body, which jax may trace
         # more than once per build): cache hits never reach this line.
-        SWEEP_TRACE_COUNTS[
-            ("sharded", shape, ranks, method, int(n_iter), n_shards)
-        ] += 1
+        SWEEP_TRACE_COUNTS.tick(("sharded", shape, ranks, method, int(n_iter), n_shards))
         return inner(indices, values, factors, xnorm2, tol)
 
     # factors are donated like the single-device _scan_sweeps: the plan

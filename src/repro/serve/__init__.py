@@ -11,17 +11,31 @@ Two serving planes live here, mirroring the paper's CPU/accelerator split
   continuous batching). Import it explicitly; it pulls in the full model
   stack, which this package init deliberately does not.
 """
-from repro.serve.batching import BatchKey, Flush, MicroBatcher
+from repro.serve.batching import (
+    AdaptiveBatchPolicy,
+    BatchKey,
+    Flush,
+    MicroBatcher,
+    PolicyUpdate,
+)
 from repro.serve.metrics import LatencyTracker, ServiceMetrics
-from repro.serve.tucker_service import ServiceConfig, TuckerService, TuckerTicket
+from repro.serve.tucker_service import (
+    ServiceConfig,
+    ServiceOverloadedError,
+    TuckerService,
+    TuckerTicket,
+)
 
 __all__ = [
+    "AdaptiveBatchPolicy",
     "BatchKey",
     "Flush",
     "LatencyTracker",
     "MicroBatcher",
+    "PolicyUpdate",
     "ServiceConfig",
     "ServiceMetrics",
+    "ServiceOverloadedError",
     "TuckerService",
     "TuckerTicket",
 ]

@@ -146,9 +146,26 @@ class ServiceMetrics:
             "repro_serve_pending", "requests queued but not yet resolved",
             labels=lbl,
         )
+        self._rejected = reg.counter(
+            "repro_serve_rejected_total",
+            "submissions refused by admission control (backpressure='reject')",
+            labels=lbl,
+        )
+        self._queue_depth = reg.gauge(
+            "repro_serve_queue_depth",
+            "requests sitting in micro-batch queues (not yet popped)",
+            labels=lbl,
+        )
+        self._inflight = reg.gauge(
+            "repro_serve_inflight_flushes",
+            "flushes currently executing across the executor pool",
+            labels=lbl,
+        )
         # reason-labeled flush counters materialize lazily (reasons are a
-        # small closed set: full/timeout/drain)
+        # small closed set: full/timeout/drain); likewise the
+        # direction-labeled adaptation counters (narrow/widen).
         self._flush_counters: Dict[str, object] = {}
+        self._adaptation_counters: Dict[str, object] = {}
         # exact recent-window percentiles stay on the deque reservoirs
         # (snapshot() bit-compat); the registry histograms expose the same
         # streams to Prometheus with cumulative-bucket semantics.
@@ -207,11 +224,31 @@ class ServiceMetrics:
         return int(self._retries.value)
 
     @property
+    def rejected(self) -> int:
+        return int(self._rejected.value)
+
+    @property
+    def queue_depth(self) -> int:
+        return int(self._queue_depth.value)
+
+    @property
+    def inflight_flushes(self) -> int:
+        return int(self._inflight.value)
+
+    @property
     def flushes(self) -> Counter:
         """reason -> count, as a plain Counter (historical shape)."""
         with self._lock:
             return Counter(
                 {r: int(c.value) for r, c in self._flush_counters.items()}
+            )
+
+    @property
+    def adaptations(self) -> Counter:
+        """direction -> count of adaptive batch-policy limit changes."""
+        with self._lock:
+            return Counter(
+                {d: int(c.value) for d, c in self._adaptation_counters.items()}
             )
 
     def _flush_counter(self, reason: str):
@@ -222,6 +259,17 @@ class ServiceMetrics:
                 labels={"service": self.service, "reason": reason},
             )
             self._flush_counters[reason] = c
+        return c
+
+    def _adaptation_counter(self, direction: str):
+        c = self._adaptation_counters.get(direction)
+        if c is None:
+            c = _obs_registry.counter(
+                "repro_serve_adaptations_total",
+                "adaptive batch-policy limit changes by direction",
+                labels={"service": self.service, "direction": direction},
+            )
+            self._adaptation_counters[direction] = c
         return c
 
     # -- recording (called by the service) ---------------------------------
@@ -277,6 +325,25 @@ class ServiceMetrics:
         with self._lock:
             self._retries.inc()
 
+    def on_reject(self, n: int = 1) -> None:
+        """Admission control refused a submit (backpressure='reject'). The
+        request never entered the queue, so ``submitted`` does NOT count
+        it — ``submitted`` stays 'accepted submissions'."""
+        with self._lock:
+            self._rejected.inc(n)
+
+    def on_adaptation(self, direction: str) -> None:
+        with self._lock:
+            self._adaptation_counter(direction).inc()
+
+    def set_queue_depth(self, depth: int) -> None:
+        with self._lock:
+            self._queue_depth.set(int(depth))
+
+    def set_inflight(self, n: int) -> None:
+        with self._lock:
+            self._inflight.set(int(n))
+
     # -- derived -----------------------------------------------------------
 
     # unlocked formula helpers: the one definition each, shared by the
@@ -326,6 +393,13 @@ class ServiceMetrics:
                 "batch_size_max": int(self._batch_size_max.value),
                 "plan_evictions": int(self._plan_evictions.value),
                 "retries": int(self._retries.value),
+                "rejected": int(self._rejected.value),
+                "queue_depth": int(self._queue_depth.value),
+                "inflight_flushes": int(self._inflight.value),
+                "adaptations": {
+                    d: int(c.value)
+                    for d, c in self._adaptation_counters.items()
+                },
                 "padding_overhead": self._padding_overhead(),
                 "queue": self.queue.summary(),
                 "execute": self.execute.summary(),

@@ -5,11 +5,34 @@ and schedules, the accelerator runs saturated batched TTM/Kron pipelines.
 ``repro.tucker`` already has the device half (``TuckerPlan.batch``: one XLA
 dispatch decomposes k nnz-padded tensors); this module is the host half that
 feeds it. Callers ``submit()`` independent decomposition requests and get a
-future-style :class:`TuckerTicket` back; a scheduler thread groups compatible
-requests — same :class:`~repro.tucker.spec.TuckerSpec`, same
-``bucket_nnz`` boundary — into micro-batches and flushes each as ONE batched
-dispatch the moment a queue holds ``max_batch`` requests or its oldest
-request has waited ``max_wait_ms``.
+future-style :class:`TuckerTicket` back; a bounded pool of executor threads
+groups compatible requests — same :class:`~repro.tucker.spec.TuckerSpec`,
+same ``bucket_nnz`` boundary — into micro-batches and flushes each as ONE
+batched dispatch the moment a queue holds ``max_batch`` requests or its
+oldest request has waited ``max_wait_ms``.
+
+Concurrency model (the division of labor the paper's hybrid platform is
+built on — CPU aggregates, accelerator never idles):
+
+  * ``max_inflight_flushes`` executor threads pop ready batches
+    independently, so flushes of *distinct* ``BatchKey``\\ s dispatch
+    concurrently — one key's device wait no longer idles every other key.
+  * Flushes of the *same* plan pipeline: host-side batch assembly (COO
+    padding + key stacking) runs outside the plan's dispatch lock, so one
+    executor assembles flush N+1 while another is in device wait on flush N
+    (see ``TuckerPlan``'s two-lock contract in ``tucker/planning.py``).
+  * Admission control bounds the work in flight: with ``max_pending`` set,
+    ``submit`` blocks (``backpressure='block'``) or raises
+    :class:`ServiceOverloadedError` (``'reject'``) once that many requests
+    are unresolved — queued *or* executing.
+  * An optional adaptive batch policy (``adaptive_target_p99_ms``) closes
+    the loop on the recorded latency distributions, narrowing a key's
+    ``max_batch``/``max_wait_ms`` when its observed p99 overshoots the
+    target and widening back when there is headroom.
+
+Every execute path resolves every ticket it dequeued — error paths fail
+them, and a belt-and-braces guard converts any would-be leak into a pointed
+``RuntimeError`` rather than a silent ``result()`` hang.
 
 Amortization contract (asserted by ``benchmarks/serve_bench.py`` and the
 ``serve_soak`` CI gate): under load, dispatches ≈ requests / max_batch, and
@@ -34,13 +57,31 @@ from typing import Any, List, Optional, Sequence, Set
 
 from repro.core.coo import SparseCOO
 from repro.obs import event as _obs_event, span as _obs_span
-from repro.serve.batching import BatchKey, Flush, MicroBatcher
+from repro.serve.batching import (
+    AdaptiveBatchPolicy,
+    BatchKey,
+    Flush,
+    MicroBatcher,
+)
 from repro.serve.metrics import ServiceMetrics
 from repro.sparse.layout import bucket_nnz, shard_pad_nnz
 from repro.tucker.result import RequestTiming, TuckerResult
 from repro.tucker.spec import ShardSpec, TuckerSpec
 
-__all__ = ["ServiceConfig", "TuckerService", "TuckerTicket"]
+__all__ = [
+    "ServiceConfig",
+    "ServiceOverloadedError",
+    "TuckerService",
+    "TuckerTicket",
+]
+
+_BACKPRESSURE_POLICIES = ("block", "reject")
+
+
+class ServiceOverloadedError(RuntimeError):
+    """``submit`` refused by admission control: the service already holds
+    ``max_pending`` unresolved requests and ``backpressure='reject'``. The
+    request was NOT enqueued — callers shed load or retry later."""
 
 
 # The plan-cache capacity knob is process-global, but services come and go:
@@ -121,6 +162,22 @@ class ServiceConfig:
         behavior; the terminal failure always reaches the tickets with no
         trailing backoff sleep.
       retry_backoff_ms: base of the exponential retry backoff.
+      max_inflight_flushes: size of the executor pool — how many flushes may
+        execute concurrently. 2 (default) overlaps one flush's device wait
+        with another's host assembly; 1 restores the strictly sequential
+        single-scheduler behavior.
+      max_pending: admission bound — the most *unresolved* requests (queued
+        or executing) the service accepts before applying backpressure.
+        ``None`` (default) is unbounded.
+      backpressure: what an over-``max_pending`` submit does: ``'block'``
+        (default) waits for capacity; ``'reject'`` raises
+        :class:`ServiceOverloadedError` immediately (counted in
+        ``ServiceMetrics.rejected``).
+      adaptive_target_p99_ms: if set, enable the per-key
+        :class:`~repro.serve.batching.AdaptiveBatchPolicy` with this target
+        end-to-end p99 (ms); ``max_batch``/``max_wait_ms`` become the
+        ceilings the policy widens back toward. ``None`` disables
+        adaptation (static limits).
     """
 
     max_batch: int = 8
@@ -132,6 +189,35 @@ class ServiceConfig:
     shard: Optional["ShardSpec"] = None
     max_retries: int = 0
     retry_backoff_ms: float = 50.0
+    max_inflight_flushes: int = 2
+    max_pending: Optional[int] = None
+    backpressure: str = "block"
+    adaptive_target_p99_ms: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if int(self.max_inflight_flushes) < 1:
+            raise ValueError(
+                f"max_inflight_flushes must be >= 1, got "
+                f"{self.max_inflight_flushes}"
+            )
+        if self.max_pending is not None and int(self.max_pending) < 1:
+            raise ValueError(
+                f"max_pending must be >= 1 (or None for unbounded), got "
+                f"{self.max_pending}"
+            )
+        if self.backpressure not in _BACKPRESSURE_POLICIES:
+            raise ValueError(
+                f"backpressure must be one of {_BACKPRESSURE_POLICIES}, got "
+                f"{self.backpressure!r}"
+            )
+        if (
+            self.adaptive_target_p99_ms is not None
+            and not float(self.adaptive_target_p99_ms) > 0.0
+        ):
+            raise ValueError(
+                f"adaptive_target_p99_ms must be > 0 (or None to disable), "
+                f"got {self.adaptive_target_p99_ms}"
+            )
 
 
 # process-wide monotonic ticket ids: the `ticket` span attribute that links a
@@ -197,8 +283,10 @@ class _Pending:
 
 class TuckerService:
     """Synchronous-API, internally queued micro-batching decomposition
-    service. See the module docstring for the architecture; thread-safe:
-    any number of threads may ``submit`` concurrently.
+    service. See the module docstring for the architecture and the
+    concurrency model; thread-safe: any number of threads may ``submit``
+    concurrently, and up to ``max_inflight_flushes`` flushes execute
+    concurrently on the executor pool.
     """
 
     def __init__(self, config: Optional[ServiceConfig] = None) -> None:
@@ -210,9 +298,21 @@ class TuckerService:
             max_batch=self.config.max_batch,
             max_wait_s=self.config.max_wait_ms / 1e3,
         )
+        self._policy: Optional[AdaptiveBatchPolicy] = None
+        if self.config.adaptive_target_p99_ms is not None:
+            self._policy = AdaptiveBatchPolicy(
+                max_batch=self.config.max_batch,
+                max_wait_s=self.config.max_wait_ms / 1e3,
+                target_p99_ms=self.config.adaptive_target_p99_ms,
+            )
         self._closing = False
         self._closed = False
         self._drain_on_close = True
+        # admission-control state, guarded by self._cv: unresolved counts
+        # every accepted request from enqueue until its ticket resolves;
+        # inflight counts batches currently inside _execute.
+        self._unresolved = 0
+        self._inflight = 0
         self._warned_specs: Set[TuckerSpec] = set()
         self._remove_eviction_hook = None
         if self.config.plan_cache_capacity is not None:
@@ -222,11 +322,16 @@ class TuckerService:
             self._remove_eviction_hook = tucker.add_plan_eviction_hook(
                 self._on_plan_evicted
             )
-        self._scheduler = threading.Thread(
-            target=self._scheduler_loop, name="tucker-service-scheduler",
-            daemon=True,
-        )
-        self._scheduler.start()
+        self._executors = [
+            threading.Thread(
+                target=self._executor_loop,
+                name=f"tucker-service-exec-{i}",
+                daemon=True,
+            )
+            for i in range(self.config.max_inflight_flushes)
+        ]
+        for t in self._executors:
+            t.start()
 
     # -- public API ---------------------------------------------------------
 
@@ -275,15 +380,34 @@ class TuckerService:
                 "all-zero tensor has no defined Tucker fit (relative error "
                 "is 0/0)"
             )
-        if spec not in self._warned_specs:
+        # check-and-claim under the lock: concurrent first-submits of one
+        # new spec used to race the bare set read/mutation below and both
+        # run the synchronous plan() (duplicated compile) and both warn.
+        # Exactly one submitter wins the claim; the plan() itself runs
+        # OUTSIDE the lock (it can compile — holding the service lock across
+        # it would stall every submit and executor).
+        with self._lock:
+            first_submit = spec not in self._warned_specs
+            if first_submit:
+                self._warned_specs.add(spec)
+        if first_submit:
             from repro import tucker
 
             # plan once per new spec, synchronously: a misconfigured spec
             # (e.g. a ShardSpec wanting more devices than are attached) must
             # raise HERE at the submit call site, like every other
             # validation error — not asynchronously as a whole-batch flush
-            # failure in the scheduler thread.
-            spec_plan = tucker.plan(spec)
+            # failure in an executor thread. (A concurrent submit of the
+            # same spec that lost the claim proceeds without waiting; if the
+            # spec is truly broken its ticket fails at flush.)
+            try:
+                spec_plan = tucker.plan(spec)
+            except BaseException:
+                # release the claim so the next submit re-validates instead
+                # of silently treating a never-planned spec as known-good
+                with self._lock:
+                    self._warned_specs.discard(spec)
+                raise
             # plan-level check: the spec property alone misses engine
             # resolution (e.g. 'auto' -> pallas) and prebuilt-engine
             # overrides. Sharded specs intentionally flush sequentially —
@@ -298,7 +422,6 @@ class TuckerService:
                     RuntimeWarning,
                     stacklevel=3,
                 )
-            self._warned_specs.add(spec)
         ticket = TuckerTicket()
         now = time.perf_counter()
         item = _Pending(coo=coo, key=key, ticket=ticket, submitted_at=now)
@@ -319,7 +442,31 @@ class TuckerService:
             with self._cv:
                 if self._closing:
                     raise RuntimeError("TuckerService is closed")
+                if (
+                    self.config.max_pending is not None
+                    and self._unresolved >= self.config.max_pending
+                ):
+                    if self.config.backpressure == "reject":
+                        self.metrics.on_reject()
+                        _obs_event(
+                            "serve.reject", ticket=ticket.ticket_id,
+                            unresolved=self._unresolved,
+                        )
+                        raise ServiceOverloadedError(
+                            f"TuckerService holds "
+                            f"{self._unresolved} unresolved requests "
+                            f"(max_pending={self.config.max_pending}, "
+                            f"backpressure='reject')"
+                        )
+                    # block: wait for executors to resolve work (they
+                    # notify_all on every batch completion) — or for close.
+                    while self._unresolved >= self.config.max_pending:
+                        self._cv.wait()
+                        if self._closing:
+                            raise RuntimeError("TuckerService is closed")
+                self._unresolved += 1
                 self._batcher.add(bkey, item, now)
+                self.metrics.set_queue_depth(len(self._batcher))
                 _obs_event(
                     "serve.enqueue", ticket=ticket.ticket_id,
                     bucket=int(bkey.bucket),
@@ -327,7 +474,11 @@ class TuckerService:
                 # counted before the notify can race a flush: 'submitted'
                 # never trails 'completed' in a concurrent snapshot
                 self.metrics.on_submit()
-                self._cv.notify()
+                # notify_all: executors AND admission-blocked submitters
+                # share this condition; a single notify could wake only a
+                # blocked submitter and leave the new work waiting out a
+                # timeout before any executor re-checks.
+                self._cv.notify_all()
         return ticket
 
     def decompose_batch(
@@ -361,11 +512,18 @@ class TuckerService:
         """Execute every queued request NOW, on the calling thread (drain
         semantics — partial batches allowed). Returns the number of requests
         flushed. Deterministic tests and latency-sensitive callers use this
-        instead of waiting out ``max_wait_ms``."""
+        instead of waiting out ``max_wait_ms``. Raises ``RuntimeError`` on a
+        closed (or closing) service: post-close the plan-cache capacity and
+        eviction hooks are already uninstalled, so silently executing work
+        there would run outside every bound the service promised."""
         flushed = 0
         while True:
             with self._cv:
+                if self._closing:
+                    raise RuntimeError("TuckerService is closed")
                 batch = self._batcher.pop_any()
+                if batch is not None:
+                    self.metrics.set_queue_depth(len(self._batcher))
             if batch is None:
                 return flushed
             flushed += len(batch.items)
@@ -375,17 +533,25 @@ class TuckerService:
         with self._cv:
             return len(self._batcher)
 
+    def inflight(self) -> int:
+        """Batches currently executing across the executor pool."""
+        with self._cv:
+            return self._inflight
+
     def close(self, drain: bool = True) -> None:
         """Stop the service. ``drain=True`` (default) executes everything
         still queued first; ``drain=False`` fails pending tickets with
-        ``RuntimeError``. Idempotent."""
+        ``RuntimeError``. Idempotent. Joins the whole executor pool, so any
+        in-flight flush finishes (and resolves its tickets) before close
+        returns."""
         with self._cv:
             if self._closed:
                 return
             self._closing = True
             self._drain_on_close = bool(drain)
             self._cv.notify_all()
-        self._scheduler.join()
+        for t in self._executors:
+            t.join()
         with self._cv:
             self._closed = True
         if self._remove_eviction_hook is not None:
@@ -399,9 +565,14 @@ class TuckerService:
     def __exit__(self, *exc) -> None:
         self.close(drain=exc == (None, None, None))
 
-    # -- scheduler ----------------------------------------------------------
+    # -- executor pool -------------------------------------------------------
 
-    def _scheduler_loop(self) -> None:
+    def _executor_loop(self) -> None:
+        """One executor thread: wait for a ready batch, execute it, repeat.
+        ``max_inflight_flushes`` of these run concurrently — each pops under
+        the shared condition variable, then executes OUTSIDE it, so distinct
+        keys' flushes overlap and same-plan flushes pipeline on the plan's
+        own dispatch lock."""
         while True:
             with self._cv:
                 batch = None
@@ -435,16 +606,67 @@ class TuckerService:
                                     )
                                 )
                             self.metrics.on_failure(len(dropped.items))
+                            self._unresolved -= len(dropped.items)
+                        self._cv.notify_all()
                     if batch is None:
+                        self.metrics.set_queue_depth(len(self._batcher))
                         return
+                self.metrics.set_queue_depth(len(self._batcher))
             self._execute(batch)
 
     # -- execution ----------------------------------------------------------
 
     def _execute(self, batch: Flush) -> None:
-        # safe from any thread (scheduler or a flush() caller): executions
-        # of one plan serialize on the plan's own lock, where the engine
-        # schedule-cache hazard actually lives.
+        # safe from any thread (an executor or a flush() caller): device
+        # executions of one plan serialize on the plan's own dispatch lock,
+        # where the engine schedule-cache hazard actually lives; host
+        # assembly pipelines outside it.
+        items = batch.items
+        with self._cv:
+            self._inflight += 1
+            self.metrics.set_inflight(self._inflight)
+        internal: Optional[BaseException] = None
+        try:
+            self._execute_inner(batch)
+        except Exception as exc:
+            # _execute_inner fails its batch internally on dispatch errors;
+            # anything escaping it is a serve-plane bug (timing/metrics/
+            # adaptation bookkeeping). The guard below turns it into ticket
+            # failures — the executor itself must survive to keep the pool
+            # at its configured width.
+            internal = exc
+            _obs_event(
+                "serve.internal_error", error=type(exc).__name__,
+                detail=str(exc),
+            )
+        finally:
+            # NO execute path may leave a ticket permanently unresolved —
+            # a leaked ticket is a silent result() hang. Anything not
+            # resolved by the happy path or the batch-failure path (e.g. an
+            # exception out of the timing/metrics code) fails loudly here.
+            leaked = [it for it in items if not it.ticket.done()]
+            if leaked:
+                cause = (
+                    f"({internal!r})" if internal is not None
+                    else "(please report)"
+                )
+                for it in leaked:
+                    it.ticket._set_exception(
+                        RuntimeError(
+                            "TuckerService internal error: flush finished "
+                            f"without resolving this ticket {cause}"
+                        )
+                    )
+                self.metrics.on_failure(len(leaked))
+            with self._cv:
+                self._unresolved -= len(items)
+                self._inflight -= 1
+                self.metrics.set_inflight(self._inflight)
+                # capacity freed: wake admission-blocked submitters (and
+                # close()-waiters)
+                self._cv.notify_all()
+
+    def _execute_inner(self, batch: Flush) -> None:
         from repro import tucker
 
         items = batch.items
@@ -453,6 +675,7 @@ class TuckerService:
         with _obs_span(
             "serve.flush", reason=batch.reason, batch_size=len(items),
             bucket=int(batch.key.bucket), tickets=tickets,
+            executor=threading.current_thread().name,
         ) as fsp:
             try:
                 plan = tucker.plan(batch.key.spec)
@@ -502,7 +725,17 @@ class TuckerService:
                     )
                 else:
                     results = dispatch()
-            except Exception as exc:  # fail the batch, keep scheduler alive
+                if len(results) != len(items):
+                    # a short (or long) result list would silently drop
+                    # tickets in the zips below — result() would then hang
+                    # forever. Fail the WHOLE batch with a pointed error.
+                    raise RuntimeError(
+                        f"plan.batch returned {len(results)} results for "
+                        f"{len(items)} requests (spec={batch.key.spec!r}) — "
+                        f"failing the whole batch instead of leaving "
+                        f"{abs(len(items) - len(results))} tickets unresolved"
+                    )
+            except Exception as exc:  # fail the batch, keep the executor alive
                 for it in items:
                     it.ticket._set_exception(exc)
                 self.metrics.on_failure(len(items))
@@ -546,6 +779,28 @@ class TuckerService:
                 queue_ms=queue_ms,
                 total_ms=total_ms,
             )
+            if self._policy is not None:
+                with self._cv:
+                    # policy state and batcher limits mutate under the
+                    # service lock: concurrent flushes of one key must not
+                    # interleave observe/apply
+                    update = self._policy.observe(batch.key, total_ms)
+                    if update is not None:
+                        self._batcher.set_limits(
+                            batch.key, update.max_batch, update.max_wait_s
+                        )
+                        # limits may have tightened: waiting executors must
+                        # recompute deadlines/fullness
+                        self._cv.notify_all()
+                if update is not None:
+                    self.metrics.on_adaptation(update.direction)
+                    _obs_event(
+                        "serve.adapt", bucket=int(batch.key.bucket),
+                        direction=update.direction,
+                        max_batch=update.max_batch,
+                        max_wait_ms=update.max_wait_s * 1e3,
+                        p99_ms=update.p99_ms,
+                    )
             for it, res in zip(items, results):
                 with _obs_span(
                     "serve.split", ticket=it.ticket.ticket_id,

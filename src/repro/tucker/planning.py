@@ -289,13 +289,27 @@ class TuckerPlan:
         # first sparse execution (spec.autotune on the Pallas engine only).
         self._tuned_blocks = None
         self.stats = PlanStats()
-        # executions serialize per plan: the engine's schedule caches are
-        # bound to ONE tensor at a time (SweepEngine._bind), so concurrent
-        # calls could contract tensor A against tensor B's schedule. Plans
-        # are shared process-wide through the plan cache — the lock lives
-        # here, not on any one caller. (A prebuilt engine handed to several
-        # plans still must not execute concurrently across them.)
+        # The plan's thread-safety contract, in two locks:
+        #
+        # * ``_exec_lock`` serializes per-tensor executions: the engine's
+        #   schedule caches are bound to ONE tensor at a time
+        #   (``SweepEngine._bind``), so concurrent ``__call__``s could
+        #   contract tensor A against tensor B's schedule. Plans are shared
+        #   process-wide through the plan cache — the lock lives here, not
+        #   on any one caller. (A prebuilt engine handed to several plans
+        #   still must not execute concurrently across them.)
+        # * ``_dispatch_lock`` serializes only the DEVICE half of the
+        #   vmapped :meth:`batch` path, which never touches the engine's
+        #   schedule caches (``_batched_scan_sweeps`` consumes raw padded
+        #   COO arrays): concurrent flushes of one plan overlap their
+        #   host-side assembly (padding + key stacking) against another
+        #   flush's device execution, and only the dispatch itself queues.
+        #   This is what lets the serving plane pipeline same-plan flushes.
         self._exec_lock = threading.RLock()
+        self._dispatch_lock = threading.Lock()
+        # informational counters are bumped from concurrent flushes; a
+        # dedicated lock keeps them exact without re-serializing execution.
+        self._stats_lock = threading.Lock()
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         eng = self.engine.name if self.engine is not None else "xla"
@@ -354,7 +368,8 @@ class TuckerPlan:
             "plan.call", algorithm=self.spec.algorithm,
             shape=list(self.spec.shape), ranks=list(self.spec.ranks),
         ) as sp:
-            self.stats.calls += 1
+            with self._stats_lock:
+                self.stats.calls += 1
             if self.spec.algorithm != "sparse" and (
                 resume_from is not None or injector is not None
             ):
@@ -431,22 +446,23 @@ class TuckerPlan:
                 f"all-zero tensor has no defined Tucker fit (relative error "
                 f"is 0/0) — filter empties out before submitting"
             )
-        with self._exec_lock, _obs_span(
-            "plan.batch", size=len(coos),
-            vmapped=self.batch_is_vmappable(keys),
-        ) as sp:  # reentrant: the fallback loop re-enters __call__
-            if not self.batch_is_vmappable(keys):
-                # stabilize the shard_map program's nnz shape across the
-                # flush: explicit-zero padding changes no contraction, and
-                # passing the target (instead of pre-padding the tensor)
-                # keeps the shard-imbalance counters on the real nonzeros
+        vmapped = self.batch_is_vmappable(keys)
+        with _obs_span("plan.batch", size=len(coos), vmapped=vmapped) as sp:
+            if not vmapped:
+                # sequential fallback: each member re-enters __call__, which
+                # serializes on _exec_lock (the engine schedule-cache
+                # hazard). Stabilize the shard_map program's nnz shape
+                # across the flush: explicit-zero padding changes no
+                # contraction, and passing the target (instead of
+                # pre-padding the tensor) keeps the shard-imbalance
+                # counters on the real nonzeros.
                 pad = pad_nnz_to if self.spec.shard is not None else None
-                results = [self(c, key=k, pad_nnz_to=pad)
-                           for c, k in zip(coos, keys)]
-            else:
+                return [self(c, key=k, pad_nnz_to=pad)
+                        for c, k in zip(coos, keys)]
+            with self._stats_lock:
                 self.stats.calls += len(coos)  # same meaning as the fallback
-                results = self._run_sparse_vmapped(coos, keys, pad_nnz_to)
-                _attach_trace_summary(results, sp)
+            results = self._run_sparse_vmapped(coos, keys, pad_nnz_to)
+            _attach_trace_summary(results, sp)
             return results
 
     # -- input validation ---------------------------------------------------
@@ -486,9 +502,10 @@ class TuckerPlan:
     def _result(self, core: Any, factors: Any, hist: Any, engine: Any,
                 dispatches: int, retraces: int,
                 schedule_builds: int) -> TuckerResult:
-        self.stats.dispatches += dispatches
-        self.stats.retraces += retraces
-        self.stats.schedule_builds += schedule_builds
+        with self._stats_lock:
+            self.stats.dispatches += dispatches
+            self.stats.retraces += retraces
+            self.stats.schedule_builds += schedule_builds
         return TuckerResult.from_history(
             core, factors, hist,
             engine=engine,
@@ -884,7 +901,7 @@ class TuckerPlan:
                     sched.indices, sched.values, tuple(factors), core,
                     xnorm2, tol, prev_err_d, done_d, n_done_d, total_sweeps,
                 )
-                _hooi.SWEEP_DISPATCH_COUNTS[("sharded", "scan")] += 1
+                _hooi.SWEEP_DISPATCH_COUNTS.tick(("sharded", "scan"))
                 return out
         else:
             if pad_nnz_to is not None and int(pad_nnz_to) > coo.nnz:
@@ -908,7 +925,7 @@ class TuckerPlan:
                     precision=eng.precision, bl=eng.bl, bk=eng.bk,
                     fuse_core=eng.fuse_core and eng.name == "pallas",
                 )
-                _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
+                _hooi.SWEEP_DISPATCH_COUNTS.tick((eng.name, "scan"))
                 return out
 
         last_spill = time.monotonic()
@@ -1031,7 +1048,7 @@ class TuckerPlan:
                 sched.indices, sched.values, tuple(factors), xnorm2,
                 jnp.float32(spec.tol),
             )
-            _hooi.SWEEP_DISPATCH_COUNTS[("sharded", "scan")] += 1
+            _hooi.SWEEP_DISPATCH_COUNTS.tick(("sharded", "scan"))
             hist = np.asarray(_hooi._fetch_history(hist_dev))  # the one d2h transfer
             n_done = int(np.sum(hist != _hooi._SKIPPED))
             dsp.set_attr("sweeps_run", n_done)
@@ -1074,7 +1091,7 @@ class TuckerPlan:
                 bk=eng.bk,
                 fuse_core=eng.fuse_core and eng.name == "pallas",
             )
-            _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "scan")] += 1
+            _hooi.SWEEP_DISPATCH_COUNTS.tick((eng.name, "scan"))
             hist = np.asarray(_hooi._fetch_history(hist_dev))  # the one d2h transfer
             n_done = int(np.sum(hist != _hooi._SKIPPED))
             dsp.set_attr("sweeps_run", n_done)
@@ -1108,7 +1125,7 @@ class TuckerPlan:
                     factors, core = _hooi.sparse_sweep(
                         coo, factors, spec.ranks, spec.method, engine=eng
                     )
-                _hooi.SWEEP_DISPATCH_COUNTS[(eng.name, "python")] += 1
+                _hooi.SWEEP_DISPATCH_COUNTS.tick((eng.name, "python"))
                 dispatches += 1
             err = jnp.sqrt(
                 jnp.maximum(xnorm2 - jnp.sum(jnp.square(core)), 0.0)
@@ -1127,11 +1144,18 @@ class TuckerPlan:
     def _run_sparse_vmapped(self, coos: Any, keys: Any,
                             pad_nnz_to: Any = None) -> List[TuckerResult]:
         spec = self.spec
-        idx, val = pad_coo_batch(coos, target_nnz=pad_nnz_to)
-        jkeys = _stack_keys(keys)
-        traces0 = _total_traces()
-        with _obs_span("sweep.dispatch", program="batched", engine="xla",
-                       batch=len(coos), padded_nnz=int(idx.shape[1])) as dsp:
+        # host-side assembly runs OUTSIDE the dispatch lock: another flush
+        # of this plan may be in device execution while this one pads and
+        # stacks — the assembly touches no shared plan state (pure numpy
+        # over the caller's tensors).
+        with _obs_span("plan.assemble", batch=len(coos)):
+            idx, val = pad_coo_batch(coos, target_nnz=pad_nnz_to)
+            jkeys = _stack_keys(keys)
+        with self._dispatch_lock, _obs_span(
+            "sweep.dispatch", program="batched", engine="xla",
+            batch=len(coos), padded_nnz=int(idx.shape[1]),
+        ) as dsp:
+            traces0 = _total_traces()
             # init + norm + all sweeps for all k tensors: ONE fused dispatch
             cores, factors, hist_dev = _hooi._batched_scan_sweeps(
                 idx, val, jkeys, jnp.float32(spec.tol),
@@ -1141,7 +1165,7 @@ class TuckerPlan:
                 n_iter=spec.n_iter,
                 dtype=spec.resolved_dtype(),
             )
-            _hooi.SWEEP_DISPATCH_COUNTS[("xla", "scan")] += 1
+            _hooi.SWEEP_DISPATCH_COUNTS.tick(("xla", "scan"))
             hists = np.asarray(_hooi._fetch_history(hist_dev))  # (k, n_iter)
             retraces = _total_traces() - traces0
             dsp.set_attr("retraces", retraces)

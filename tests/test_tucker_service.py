@@ -23,11 +23,13 @@ from repro.core.coo import SparseCOO
 
 from repro import tucker
 from repro.serve import (
+    AdaptiveBatchPolicy,
     BatchKey,
     LatencyTracker,
     MicroBatcher,
     ServiceConfig,
     ServiceMetrics,
+    ServiceOverloadedError,
     TuckerService,
 )
 from repro.serve.batching import FLUSH_DRAIN, FLUSH_FULL, FLUSH_TIMEOUT
@@ -486,9 +488,15 @@ def test_service_close_without_drain_fails_tickets():
 
 def test_close_without_drain_does_not_execute_ready_batches(monkeypatch):
     """close(drain=False) must fail queued-but-ready batches, not run them:
-    an in-flight batch finishes, a full queue behind it gets RuntimeError."""
+    an in-flight batch finishes, a full queue behind it gets RuntimeError.
+    max_inflight_flushes=1 pins a single executor so the second ready batch
+    is deterministically still queued when close lands."""
     coos = _coos(4, seed0=440)
-    svc = TuckerService(ServiceConfig(max_batch=2, max_wait_ms=10_000.0))
+    svc = TuckerService(
+        ServiceConfig(
+            max_batch=2, max_wait_ms=10_000.0, max_inflight_flushes=1
+        )
+    )
     gate = threading.Event()
     real_batch = tucker.TuckerPlan.batch
 
@@ -665,3 +673,424 @@ def test_soak_mixed_nnz_parity_and_amortization():
         )
         np.testing.assert_allclose(results[i].fit_history, ref.fit_history,
                                    atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Concurrent serving plane: race/hang regressions, executor-pool overlap,
+# admission control, adaptive batch policy (ISSUE 10).
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_first_submits_plan_exactly_once(monkeypatch):
+    """_warned_specs race regression: concurrent first-submits of one NEW
+    spec must run the synchronous tucker.plan() validation exactly once (the
+    claim is check-and-add under the service lock) — the old unlocked
+    read/mutate let every racer duplicate the call."""
+    spec = tucker.TuckerSpec(
+        shape=(14, 12, 10), ranks=(4, 2, 2), method="gram", n_iter=2
+    )
+    coos = _coos(4, seed0=900)
+    real_plan = tucker.plan
+    calls = []
+    start = threading.Barrier(4)
+
+    def counting_plan(s, *a, **kw):
+        calls.append(s)
+        time.sleep(0.05)  # widen the race window the old code lost
+        return real_plan(s, *a, **kw)
+
+    monkeypatch.setattr(tucker, "plan", counting_plan)
+    svc = TuckerService(ServiceConfig(max_batch=64, max_wait_ms=60_000.0))
+    try:
+        errs = []
+
+        def submit(i):
+            start.wait(10)
+            try:
+                svc.submit_coo(coos[i], spec)
+            except Exception as exc:  # pragma: no cover - failure detail
+                errs.append(exc)
+
+        threads = [
+            threading.Thread(target=submit, args=(i,)) for i in range(4)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+        assert not errs
+        assert len(calls) == 1, f"plan() ran {len(calls)}x for one new spec"
+    finally:
+        svc.close(drain=False)
+
+
+def test_failed_spec_plan_releases_first_submit_claim(monkeypatch):
+    """If the first-submit plan() raises, the claim must be released so the
+    next submit re-validates — not treat a never-planned spec as known."""
+    spec = tucker.TuckerSpec(
+        shape=(14, 12, 10), ranks=(5, 2, 2), method="gram", n_iter=2
+    )
+    coo = _coos(1, seed0=920)[0]
+    real_plan = tucker.plan
+    n_calls = {"n": 0}
+
+    def flaky_plan(s, *a, **kw):
+        n_calls["n"] += 1
+        if n_calls["n"] == 1:
+            raise RuntimeError("transient planning failure")
+        return real_plan(s, *a, **kw)
+
+    monkeypatch.setattr(tucker, "plan", flaky_plan)
+    with TuckerService(ServiceConfig(max_batch=1, max_wait_ms=60_000.0)) as svc:
+        with pytest.raises(RuntimeError, match="transient planning failure"):
+            svc.submit_coo(coo, spec)
+        t = svc.submit_coo(coo, spec)  # claim released -> validated again
+        assert n_calls["n"] >= 2
+        assert t.result(timeout=300) is not None
+
+
+def test_short_batch_results_fail_whole_batch(monkeypatch):
+    """zip silent-hang regression: plan.batch returning fewer results than
+    requests must fail EVERY ticket with a pointed error — the old bare
+    zip dropped the surplus tickets and result() hung forever."""
+    coos = _coos(2, seed0=930)
+    real_batch = tucker.TuckerPlan.batch
+
+    def short_batch(self, coos_, keys=None, pad_nnz_to=None):
+        return real_batch(self, coos_, keys=keys, pad_nnz_to=pad_nnz_to)[:-1]
+
+    monkeypatch.setattr(tucker.TuckerPlan, "batch", short_batch)
+    svc = TuckerService(ServiceConfig(max_batch=2, max_wait_ms=60_000.0))
+    try:
+        t0 = svc.submit_coo(coos[0], SPEC)
+        t1 = svc.submit_coo(coos[1], SPEC)
+        for t in (t0, t1):
+            with pytest.raises(RuntimeError, match="failing the whole batch"):
+                t.result(timeout=300)
+        assert svc.metrics.failed == 2
+    finally:
+        svc.close(drain=False)
+
+
+def test_flush_after_close_raises():
+    """flush() on a closed service must raise like submit does — the old
+    silent execution ran work on a service whose plan-cache capacity and
+    eviction hooks were already uninstalled."""
+    svc = TuckerService(ServiceConfig(max_wait_ms=10_000.0))
+    svc.close()
+    with pytest.raises(RuntimeError, match="TuckerService is closed"):
+        svc.flush()
+
+
+def test_no_ticket_left_unresolved_by_any_execute_path(monkeypatch):
+    """Belt-and-braces guard: even when post-dispatch bookkeeping blows up,
+    every dequeued ticket resolves (pointed internal error, never a hang)."""
+    coo = _coos(1, seed0=935)[0]
+    svc = TuckerService(ServiceConfig(max_batch=1, max_wait_ms=60_000.0))
+
+    def boom(*a, **kw):
+        raise ZeroDivisionError("bookkeeping bug")
+
+    monkeypatch.setattr(svc.metrics, "on_flush", boom)
+    try:
+        t = svc.submit_coo(coo, SPEC)
+        with pytest.raises(RuntimeError, match="without resolving"):
+            t.result(timeout=300)
+        assert svc.metrics.failed >= 1
+    finally:
+        svc.close(drain=False)
+
+
+def test_distinct_key_flushes_overlap(monkeypatch):
+    """Tentpole proof: two executors run flushes of distinct BatchKeys at
+    the SAME time — the 2-party barrier inside plan.batch only passes if
+    both flushes are simultaneously in flight (a sequential scheduler
+    deadlocks it until the 60s timeout breaks the barrier and the test
+    fails via the ticket exceptions)."""
+    spec_b = tucker.TuckerSpec(
+        shape=(14, 12, 10), ranks=(2, 2, 2), method="gram", n_iter=2
+    )
+    coos = _coos(2, seed0=940)
+    barrier = threading.Barrier(2)
+    real_batch = tucker.TuckerPlan.batch
+
+    def rendezvous_batch(self, *a, **kw):
+        barrier.wait(60)
+        return real_batch(self, *a, **kw)
+
+    monkeypatch.setattr(tucker.TuckerPlan, "batch", rendezvous_batch)
+    cfg = ServiceConfig(
+        max_batch=1, max_wait_ms=60_000.0, max_inflight_flushes=2
+    )
+    with TuckerService(cfg) as svc:
+        t0 = svc.submit_coo(coos[0], SPEC)
+        t1 = svc.submit_coo(coos[1], spec_b)
+        assert t0.result(timeout=300) is not None
+        assert t1.result(timeout=300) is not None
+        assert svc.metrics.failed == 0
+
+
+def test_admission_reject(monkeypatch):
+    """backpressure='reject': an over-max_pending submit raises
+    ServiceOverloadedError without enqueueing; capacity freed by completed
+    flushes admits again; the rejection is counted."""
+    coos = _coos(3, seed0=950)
+    gate = threading.Event()
+    real_batch = tucker.TuckerPlan.batch
+
+    def gated_batch(self, *a, **kw):
+        gate.wait(120)
+        return real_batch(self, *a, **kw)
+
+    monkeypatch.setattr(tucker.TuckerPlan, "batch", gated_batch)
+    cfg = ServiceConfig(
+        max_batch=1, max_wait_ms=60_000.0, max_inflight_flushes=2,
+        max_pending=2, backpressure="reject",
+    )
+    svc = TuckerService(cfg)
+    try:
+        t0 = svc.submit_coo(coos[0], SPEC)
+        t1 = svc.submit_coo(coos[1], SPEC)
+        with pytest.raises(ServiceOverloadedError, match="max_pending=2"):
+            svc.submit_coo(coos[2], SPEC)
+        assert svc.metrics.rejected == 1
+        assert svc.metrics.snapshot()["rejected"] == 1
+        # the rejected request never entered the queue
+        assert svc.metrics.submitted == 2
+        gate.set()
+        assert t0.result(timeout=300) is not None
+        assert t1.result(timeout=300) is not None
+        t2 = svc.submit_coo(coos[2], SPEC)  # capacity freed -> admitted
+        assert t2.result(timeout=300) is not None
+    finally:
+        gate.set()
+        svc.close()
+
+
+def test_admission_block_waits_for_capacity(monkeypatch):
+    """backpressure='block': an over-max_pending submit parks until a flush
+    resolves enough requests, then enqueues and completes normally."""
+    coos = _coos(2, seed0=960)
+    gate = threading.Event()
+    real_batch = tucker.TuckerPlan.batch
+
+    def gated_batch(self, *a, **kw):
+        gate.wait(120)
+        return real_batch(self, *a, **kw)
+
+    monkeypatch.setattr(tucker.TuckerPlan, "batch", gated_batch)
+    cfg = ServiceConfig(
+        max_batch=1, max_wait_ms=60_000.0, max_inflight_flushes=1,
+        max_pending=1, backpressure="block",
+    )
+    svc = TuckerService(cfg)
+    try:
+        t0 = svc.submit_coo(coos[0], SPEC)
+        got = {}
+
+        def blocked_submit():
+            got["ticket"] = svc.submit_coo(coos[1], SPEC)
+
+        th = threading.Thread(target=blocked_submit)
+        th.start()
+        time.sleep(0.3)
+        assert th.is_alive() and "ticket" not in got  # admission-parked
+        gate.set()
+        th.join(300)
+        assert not th.is_alive()
+        assert t0.result(timeout=300) is not None
+        assert got["ticket"].result(timeout=300) is not None
+    finally:
+        gate.set()
+        svc.close()
+
+
+def test_blocked_submit_raises_on_close(monkeypatch):
+    """A submitter parked on admission must not hang forever when the
+    service closes under it — it raises the closed error."""
+    coos = _coos(2, seed0=965)
+    gate = threading.Event()
+    real_batch = tucker.TuckerPlan.batch
+
+    def gated_batch(self, *a, **kw):
+        gate.wait(120)
+        return real_batch(self, *a, **kw)
+
+    monkeypatch.setattr(tucker.TuckerPlan, "batch", gated_batch)
+    cfg = ServiceConfig(
+        max_batch=1, max_wait_ms=60_000.0, max_inflight_flushes=1,
+        max_pending=1, backpressure="block",
+    )
+    svc = TuckerService(cfg)
+    t0 = svc.submit_coo(coos[0], SPEC)
+    errs = []
+
+    def blocked_submit():
+        try:
+            svc.submit_coo(coos[1], SPEC)
+        except RuntimeError as exc:
+            errs.append(exc)
+
+    th = threading.Thread(target=blocked_submit)
+    th.start()
+    time.sleep(0.3)
+    assert th.is_alive()
+    closer = threading.Thread(target=svc.close)  # drain=True
+    closer.start()
+    time.sleep(0.2)
+    gate.set()  # let the in-flight batch (and close) finish
+    th.join(300)
+    closer.join(300)
+    assert not th.is_alive() and not closer.is_alive()
+    assert len(errs) == 1 and "closed" in str(errs[0])
+    assert t0.result(timeout=300) is not None
+
+
+def test_microbatcher_per_key_limits():
+    """set_limits overrides flush policy for one key only (adaptive-policy
+    plumbing): fullness, timeout, and next_deadline all honor it."""
+    mb = MicroBatcher(max_batch=4, max_wait_s=10.0)
+    k = BatchKey(spec=SPEC, bucket=512)
+    assert mb.limits(k) == (4, 10.0)
+    mb.set_limits(k, 2, 0.5)
+    assert mb.limits(k) == (2, 0.5)
+    mb.add(k, "a", now=0.0)
+    assert mb.pop_ready(0.1) is None  # 1 < 2 and 0.1 < 0.5
+    assert mb.next_deadline() == pytest.approx(0.5)
+    got = mb.pop_ready(0.6)  # overridden wait expired
+    assert got is not None and got.reason == FLUSH_TIMEOUT
+    mb.add(k, "a", now=1.0)
+    mb.add(k, "b", now=1.0)
+    got = mb.pop_ready(1.0)  # full at the overridden cap
+    assert got is not None and got.reason == FLUSH_FULL
+    assert len(got.items) == 2
+    # other keys keep the defaults
+    k2 = BatchKey(spec=SPEC, bucket=1024)
+    assert mb.limits(k2) == (4, 10.0)
+    with pytest.raises(ValueError):
+        mb.set_limits(k, 0, 1.0)
+
+
+def test_adaptive_policy_narrows_then_widens():
+    """Control law: p99 over target halves (batch, wait); p99 under half
+    the target widens back toward the ceilings; floors are respected."""
+    pol = AdaptiveBatchPolicy(
+        max_batch=8, max_wait_s=0.002, target_p99_ms=10.0,
+        window=4, period=2,
+    )
+    k = BatchKey(spec=SPEC, bucket=512)
+    assert pol.limits(k) == (8, 0.002)
+    assert pol.observe(k, [50.0, 60.0]) is None  # not an evaluation point
+    upd = pol.observe(k, [55.0, 65.0])
+    assert upd is not None and upd.direction == "narrow"
+    assert upd.max_batch == 4 and upd.max_wait_s == pytest.approx(0.001)
+    assert pol.limits(k) == (4, pytest.approx(0.001))
+    # sustained overshoot keeps narrowing, but never through the floors
+    for _ in range(10):
+        pol.observe(k, [100.0])
+    assert pol.limits(k)[0] == 1
+    assert pol.limits(k)[1] >= 0.0
+    # recovery: fast samples roll the slow ones out of the window -> widen
+    widened = False
+    for _ in range(10):
+        upd = pol.observe(k, [1.0, 1.0])
+        if upd is not None:
+            assert upd.direction == "widen"
+            widened = True
+    assert widened
+    b, w = pol.limits(k)
+    assert 1 < b <= 8 and 0.0 < w <= 0.002
+    # in-band p99 holds (no update at the evaluation point)
+    pol2 = AdaptiveBatchPolicy(
+        max_batch=8, max_wait_s=0.002, target_p99_ms=10.0, period=1
+    )
+    assert pol2.observe(k, [7.0, 8.0]) is None
+    with pytest.raises(ValueError, match="target_p99_ms"):
+        AdaptiveBatchPolicy(max_batch=8, max_wait_s=0.002, target_p99_ms=0.0)
+
+
+def test_service_adaptive_policy_narrows_under_slo_pressure():
+    """End-to-end adaptation: an unattainable p99 target makes the service
+    narrow the key's limits and count the adaptation."""
+    coos = _coos(8, seed0=970)
+    cfg = ServiceConfig(
+        max_batch=4, max_wait_ms=60_000.0, adaptive_target_p99_ms=1e-6
+    )
+    with TuckerService(cfg) as svc:
+        for c in coos:  # one flush per request -> hits evaluation points
+            t = svc.submit_coo(c, SPEC)
+            svc.flush()
+            assert t.result(timeout=300) is not None
+        assert svc.metrics.adaptations.get("narrow", 0) >= 1
+        snap = svc.metrics.snapshot()
+        assert snap["adaptations"].get("narrow", 0) >= 1
+        assert snap["failed"] == 0
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="max_inflight_flushes"):
+        ServiceConfig(max_inflight_flushes=0)
+    with pytest.raises(ValueError, match="max_pending"):
+        ServiceConfig(max_pending=0)
+    with pytest.raises(ValueError, match="backpressure"):
+        ServiceConfig(backpressure="drop")
+    with pytest.raises(ValueError, match="adaptive_target_p99_ms"):
+        ServiceConfig(adaptive_target_p99_ms=-1.0)
+
+
+def test_hammer_concurrent_submit_flush_close():
+    """Multi-threaded hammer: concurrent submitters (two specs), flush()
+    callers racing the executor pool, close(drain=True) mid-burst. Every
+    accepted ticket resolves successfully; the final snapshot balances."""
+    spec_b = tucker.TuckerSpec(
+        shape=SPEC.shape, ranks=(3, 3, 2), method="gram", n_iter=2
+    )
+    coos = _coos(4, seed0=990)
+    cfg = ServiceConfig(
+        max_batch=3, max_wait_ms=0.5, max_inflight_flushes=3
+    )
+    svc = TuckerService(cfg)
+    tickets, tlock = [], threading.Lock()
+    stop = threading.Event()
+
+    def submitter(tid):
+        rng = np.random.default_rng(tid)
+        while not stop.is_set():
+            try:
+                t = svc.submit_coo(
+                    coos[int(rng.integers(len(coos)))],
+                    SPEC if rng.integers(2) == 0 else spec_b,
+                )
+            except RuntimeError:
+                return  # service closed mid-burst
+            with tlock:
+                tickets.append(t)
+            time.sleep(0.002)
+
+    def flusher():
+        while not stop.is_set():
+            try:
+                svc.flush()
+            except RuntimeError:
+                return  # closed
+            time.sleep(0.01)
+
+    threads = [
+        threading.Thread(target=submitter, args=(i,)) for i in range(4)
+    ] + [threading.Thread(target=flusher)]
+    for t in threads:
+        t.start()
+    time.sleep(1.5)
+    svc.close(drain=True)  # mid-burst close: drains everything accepted
+    stop.set()
+    for t in threads:
+        t.join(300)
+        assert not t.is_alive()
+    assert tickets  # the burst actually submitted work
+    for t in tickets:
+        assert t.done()  # close(drain=True) resolved every accepted ticket
+        assert t.result(timeout=1) is not None
+    snap = svc.metrics.snapshot()
+    assert snap["completed"] == len(tickets)
+    assert snap["failed"] == 0 and snap["pending"] == 0
+    assert snap["queue_depth"] == 0 and snap["inflight_flushes"] == 0
